@@ -1,0 +1,43 @@
+"""Paper §III-A analytics menu — device-side graph algebra throughput.
+
+The compute hot path of every analytic is semiring SpMV / segment
+reduction over the incidence matrix; these run compiled (XLA CPU here,
+Pallas on TPU) and scale with nnz.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COO, graph, spmv
+from repro.analytics import powerlaw
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for nnz in (10_000, 100_000, 1_000_000):
+        n = nnz // 10
+        m = COO.from_numpy(rng.integers(0, n, nnz), rng.integers(0, n, nnz),
+                           np.ones(nnz, np.float32), (n, n))
+        x = jnp.ones((n,), jnp.float32)
+        spmv(m, x).block_until_ready()
+        t = timeit(lambda: spmv(m, x).block_until_ready(), repeat=5)
+        emit(f"spmv_nnz_{nnz}", t * 1e6,
+             f"gnnz_per_s={nnz / t / 1e9:.3f}")
+        pr = graph.pagerank(m, num_iters=20)
+        t = timeit(lambda: graph.pagerank(m, num_iters=20)
+                   .block_until_ready(), repeat=3)
+        emit(f"pagerank20_nnz_{nnz}", t * 1e6,
+             f"edges_x_iters_per_s={nnz * 20 / t / 1e9:.3f}G")
+    deg = jnp.asarray(rng.pareto(1.3, 100_000).astype(np.float32))
+    t = timeit(lambda: powerlaw.fit_rank_size(deg).alpha.block_until_ready(),
+               repeat=5)
+    emit("powerlaw_fit_100k", t * 1e6,
+         f"alpha={float(powerlaw.fit_rank_size(deg).alpha):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper §IV-A/C/D — per-stage data expansion factors.
+
+The paper reports: 700 GB compressed → 2.3 TB uncompressed (~3.3×),
+then ~10× on dense-array construction (2.3 TB → 20 TB).  We measure the
+same per-stage byte accounting on synthetic traffic.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from repro.db import EdgeStore
+from repro.pipeline import PipelineConfig, TrafficConfig, run_pipeline
+
+from .common import emit
+
+
+def main() -> None:
+    d = tempfile.mkdtemp(prefix="bench_expansion_")
+    try:
+        cfg = PipelineConfig(
+            workdir=d, n_files=2, duration_per_file_s=1.0,
+            split_size=96 * 1024,
+            traffic=TrafficConfig(n_hosts=128, pkt_rate=4000.0, seed=3),
+            n_workers=2)
+        stats = run_pipeline(cfg, EdgeStore(n_tablets=4))
+        order = ["uncompress", "split", "parse", "sort", "sparse"]
+        for stage in order:
+            st = stats["stages"].get(stage, {})
+            bi, bo = st.get("bytes_in", 0), st.get("bytes_out", 0)
+            if bi:
+                emit(f"expansion_{stage}", 0.0,
+                     f"in={bi}B;out={bo}B;factor={bo / bi:.2f}x")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — correctness
+path; wall numbers are NOT TPU perf, the roofline table covers that).
+Compares each kernel's interpret-mode call against its compiled pure-jnp
+oracle to document overhead and validate at benchmark shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.segsum import segsum
+from repro.kernels.flash_attention import flash_attention
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    key = jax.random.key(0)
+    ids = jnp.sort(jax.random.randint(key, (50_000,), 0, 4096))
+    vals = jnp.ones((50_000,))
+    out = segsum(ids, vals, 4096, block_nnz=2048, block_seg=1024)
+    exp = ref.segsum_ref(ids, vals, 4096)
+    ok = bool(jnp.allclose(out, exp, atol=1e-3))
+    t = timeit(lambda: ref.segsum_ref(ids, vals, 4096).block_until_ready(),
+               repeat=5)
+    emit("segsum_oracle_50k", t * 1e6, f"kernel_allclose={ok}")
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, block_q=128, block_k=128)
+    exp = ref.flash_attention_ref(q, k, v)
+    ok = bool(jnp.allclose(out, exp, atol=1e-4))
+    t = timeit(lambda: ref.flash_attention_ref(q, k, v).block_until_ready(),
+               repeat=5)
+    emit("flash_attn_oracle_256", t * 1e6, f"kernel_allclose={ok}")
+
+
+if __name__ == "__main__":
+    main()

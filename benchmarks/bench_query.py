@@ -1,0 +1,43 @@
+"""Paper Fig. 2 — 'find 1.1.1.1's connections' in three systems.
+
+Measures the same query through (a) the Assoc algebra (the D4M form) and
+(b) the database (Accumulo-analog row scans via the transpose table).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core import Assoc, graph
+from repro.db import EdgeStore
+from repro.pipeline import TrafficConfig, botnet_truth, stages
+from repro.pipeline.pcap import records_to_tsv, synth_packets
+from repro.core.schema import parse_tsv, val2col
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    tcfg = TrafficConfig(n_hosts=256, pkt_rate=3000.0, seed=9)
+    rec = synth_packets(tcfg, 1.0)
+    E = val2col(parse_tsv(records_to_tsv(rec)))
+    db = EdgeStore(n_tablets=4)
+    db.put(E.putval("1,"))
+    ip = botnet_truth(tcfg)["c2"]
+
+    t = timeit(lambda: graph.connections(E, ip), repeat=5)
+    n = len(graph.connections(E, ip).col)
+    emit("fig2_query_assoc_algebra", t * 1e6, f"n_connections={n}")
+
+    t = timeit(lambda: db.connections(ip), repeat=5)
+    n = len(db.connections(ip))
+    emit("fig2_query_database", t * 1e6, f"n_connections={n}")
+
+    t = timeit(lambda: db.degree(f"ip.dst|{ip}"), repeat=5)
+    emit("fig2_degree_lookup", t * 1e6, f"deg={db.degree(f'ip.dst|{ip}')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Serving throughput (smoke scale): batched prefill + decode tok/s.
+
+Not a TPU number — the roofline table covers target-hardware serving;
+this verifies the serving loop end-to-end and gives the CPU-smoke rate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import smoke_config
+from repro.launch.serve import generate
+from repro.models import init_params
+
+from .common import emit
+
+
+def main() -> None:
+    for arch in ("h2o-danube-1.8b", "rwkv6-1.6b"):
+        cfg = smoke_config(arch)
+        params = init_params(cfg, jax.random.key(0))
+        prompts = ["ip.src|1.1.1.1", "tcp.dstport|6667", "10.0.0.", "a"]
+        generate(cfg, params, prompts, max_new=4, s_max=96)  # warm
+        t0 = time.perf_counter()
+        n_new = 16
+        generate(cfg, params, prompts, max_new=n_new, s_max=96)
+        dt = time.perf_counter() - t0
+        toks = n_new * len(prompts)
+        emit(f"serve_smoke_{arch.replace('-', '_').replace('.', '_')}",
+             dt / toks * 1e6, f"tok_per_s={toks / dt:.1f}")
+
+
+if __name__ == "__main__":
+    main()

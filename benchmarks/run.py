@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see each module's
+docstring for the paper artifact it reproduces):
+
+* bench_pipeline_scaling — Fig. 5 (stage speedup vs workers)
+* bench_ingest           — §IV-F (multi-instance DB topology)
+* bench_expansion        — §IV-A/C/D (per-stage data expansion)
+* bench_loc              — §IV-G (135-line user pipeline claim)
+* bench_query            — Fig. 2 (connection queries)
+* bench_analytics        — §III-A (device-side graph algebra)
+* bench_kernels          — Pallas kernels vs oracles
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from . import (bench_analytics, bench_expansion, bench_ingest,
+                   bench_kernels, bench_loc, bench_pipeline_scaling,
+                   bench_query, bench_serving)
+    print("name,us_per_call,derived")
+    for mod in (bench_loc, bench_expansion, bench_query, bench_ingest,
+                bench_analytics, bench_kernels, bench_serving,
+                bench_pipeline_scaling):
+        try:
+            mod.main()
+        except Exception:
+            print(f"{mod.__name__},FAILED,")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

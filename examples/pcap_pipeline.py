@@ -1,0 +1,76 @@
+"""The paper's full pipeline as a user script (the "135 lines" artifact).
+
+Everything an analyst writes to go from raw compressed captures to a
+queryable edge database with degree tables — uncompress → split → parse
+→ sort → sparse → ingest — plus the Fig. 2 connection query and the
+botnet detection the paper's analytics enable.
+
+Run:  PYTHONPATH=src python examples/pcap_pipeline.py
+"""
+import glob
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro import analytics
+from repro.core.assoc import Assoc
+from repro.db import MultiInstanceDB
+from repro.pipeline import (PipelineConfig, TrafficConfig, botnet_truth,
+                            run_pipeline)
+
+workdir = tempfile.mkdtemp(prefix="d4m_pipeline_")
+
+# --- configure the capture + cluster ------------------------------------
+traffic = TrafficConfig(
+    n_hosts=256,            # the visible host population
+    pkt_rate=150.0,         # packets/second on the tap
+    n_bots=12,              # injected botnet (ground truth for eval)
+    beacon_period_s=5.0,
+    seed=42,
+)
+cfg = PipelineConfig(
+    workdir=workdir,
+    n_files=2,              # capture files (the paper used 385)
+    duration_per_file_s=45.0,
+    split_size=128 * 1024,  # the paper's 5 MB splits, scaled down
+    traffic=traffic,
+    n_workers=4,            # worker pool (the paper used 24,640 cores)
+)
+
+# --- the paper's §IV-F topology: parallel 16-tablet instances ------------
+db = MultiInstanceDB(n_instances=2, tablets_per_instance=4)
+
+# --- run all six stages (journaled: re-running resumes) ------------------
+stats = run_pipeline(cfg, db)
+print("pipeline stages:")
+for stage, st in stats["stages"].items():
+    if "bytes_in" in st and st["bytes_in"]:
+        print(f"  {stage:10s} {st['bytes_in']:>10d}B → {st['bytes_out']:>10d}B"
+              f"  ({st['bytes_out'] / st['bytes_in']:.2f}x)")
+print(f"database entries: {stats['db_entries']}")
+
+# --- Fig. 2: find a host's connections straight from the database --------
+truth = botnet_truth(traffic)
+c2 = truth["c2"]
+conns = db.connections(c2)
+print(f"\nconnections of {c2}: {len(conns)} hosts "
+      f"(degree {db.degree(f'ip.dst|{c2}'):.0f})")
+
+# --- load the incidence matrix and run the analytics ---------------------
+E = Assoc()
+for path in sorted(glob.glob(os.path.join(workdir, "*.E.npz"))):
+    E = E + Assoc.load(path)
+print(f"incidence matrix: {E.shape[0]} packets x {E.shape[1]} field|values")
+
+report = analytics.detect_c2(E, top_k=5)
+print("\nC2 candidates (fused fan-in x periodicity x port-concentration):")
+for host, score, fanin in zip(report.hosts, report.scores, report.fanin):
+    marker = "  <-- injected C2" if host == c2 else ""
+    print(f"  {host:16s} score={score:6.3f} fanin={fanin:4.0f}{marker}")
+
+assert c2 in list(report.hosts[:3]), "detection failed"
+print("\ninjected C2 recovered from the traffic. pipeline complete.")

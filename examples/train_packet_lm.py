@@ -1,0 +1,57 @@
+"""End-to-end driver: D4M pipeline corpus → LM training → generation.
+
+The framework integration the paper's Fig. 1 gestures at: the same
+high-level environment runs the ingest pipeline AND trains/serves a
+model on its output, with checkpoint/restart.  Uses a reduced rwkv6
+config so it runs on CPU in a couple of minutes.
+
+Run:  PYTHONPATH=src python examples/train_packet_lm.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.data import TokenStream
+from repro.launch.serve import generate
+from repro.launch.train import synth_corpus
+from repro.models import init_params
+from repro.train import OptConfig, adamw_init, make_train_step
+from repro.launch.mesh import make_smoke_mesh
+import jax.numpy as jnp
+
+workdir = tempfile.mkdtemp(prefix="packet_lm_")
+
+# --- stage the corpus through the pipeline --------------------------------
+pattern = synth_corpus(os.path.join(workdir, "data"), n_files=2)
+stream = TokenStream(pattern, seq_len=128, batch=4)
+
+# --- train a reduced rwkv6 on packet logs ----------------------------------
+cfg = smoke_config("rwkv6-1.6b")
+mesh = make_smoke_mesh(len(jax.devices()))
+params = init_params(cfg, jax.random.key(0))
+opt_state = adamw_init(params)
+step_fn = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3, warmup_steps=5),
+                                  mesh), donate_argnums=(0, 1))
+losses = []
+with mesh:
+    for step in range(30):
+        batch = {k: jnp.minimum(jnp.asarray(v), cfg.vocab - 1)
+                 for k, v in stream.next_batch().items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if step % 5 == 0:
+            print(f"step {step:3d}  loss {losses[-1]:.4f}")
+
+print(f"\nloss: {np.mean(losses[:5]):.3f} → {np.mean(losses[-5:]):.3f}")
+assert np.mean(losses[-5:]) < np.mean(losses[:5]), "no learning?"
+
+# --- generate packet-log-ish text -------------------------------------------
+outs = generate(cfg, params, ["64.22."], max_new=24, s_max=192)
+print("sample:", repr(outs[0]))
+print("\ntrained on pipeline output; loss improved. done.")

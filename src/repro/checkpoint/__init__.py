@@ -1,0 +1,3 @@
+from .manager import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]

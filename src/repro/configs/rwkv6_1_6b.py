@@ -1,0 +1,13 @@
+"""rwkv6-1.6b (Finch) — attention-free, data-dependent decay.
+
+[arXiv:2404.05892; unverified]  24L d_model=2048 d_ff=7168 (channel mix)
+vocab=65536; 32 heads of dim 64 for the wkv state.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=7168, vocab=65536,
+    pattern="W",
+)

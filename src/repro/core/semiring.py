@@ -1,0 +1,94 @@
+"""Semiring algebra for associative arrays.
+
+D4M associative arrays take values in a semiring (S, ⊕, ⊗, 0, 1).  The
+classic examples used in the paper's analytics are:
+
+* ``plus_times``  — ordinary sparse linear algebra (graph construction,
+  degree computation, correlation: E'*E).
+* ``min_plus`` / ``max_plus`` — shortest/longest path relaxations.
+* ``max_min``    — bottleneck capacities.
+* ``or_and``     — boolean reachability (logical adjacency).
+* ``max_times``  — Viterbi-style products.
+
+Each semiring carries the jnp element-wise combine (``mul``), the
+segment-reduction used to contract an axis (``segment_reduce``), and the
+identities.  The sparse routines in :mod:`repro.core.sparse` are generic
+over this object, so SpMV/SpMM/degree all work for every semiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (numeric) semiring with JAX-friendly reduction plumbing."""
+
+    name: str
+    add: Callable[[Array, Array], Array]          # ⊕, elementwise
+    mul: Callable[[Array, Array], Array]          # ⊗, elementwise
+    zero: float                                    # identity of ⊕ (sparse "empty")
+    one: float                                     # identity of ⊗
+    # segment reduction implementing ⊕ over groups (used to contract axes).
+    segment_reduce: Callable[..., Array] = None  # type: ignore[assignment]
+
+    def reduce(self, data: Array, segment_ids: Array, num_segments: int) -> Array:
+        return self.segment_reduce(
+            data, segment_ids, num_segments=num_segments,
+            indices_are_sorted=False,
+        )
+
+    def np_add(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Host-side ⊕ for the scipy/numpy path (Assoc construction)."""
+        return np.asarray(self.add(jnp.asarray(a), jnp.asarray(b)))
+
+
+def _seg_sum(data, segment_ids, num_segments, indices_are_sorted=False):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments,
+                               indices_are_sorted=indices_are_sorted)
+
+
+def _seg_min(data, segment_ids, num_segments, indices_are_sorted=False):
+    return jax.ops.segment_min(data, segment_ids, num_segments=num_segments,
+                               indices_are_sorted=indices_are_sorted)
+
+
+def _seg_max(data, segment_ids, num_segments, indices_are_sorted=False):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments,
+                               indices_are_sorted=indices_are_sorted)
+
+
+PLUS_TIMES = Semiring("plus_times", jnp.add, jnp.multiply, 0.0, 1.0, _seg_sum)
+MIN_PLUS = Semiring("min_plus", jnp.minimum, jnp.add, float(np.inf), 0.0, _seg_min)
+MAX_PLUS = Semiring("max_plus", jnp.maximum, jnp.add, float(-np.inf), 0.0, _seg_max)
+MAX_MIN = Semiring("max_min", jnp.maximum, jnp.minimum, 0.0, float(np.inf), _seg_max)
+MAX_TIMES = Semiring("max_times", jnp.maximum, jnp.multiply, 0.0, 1.0, _seg_max)
+OR_AND = Semiring(
+    "or_and",
+    lambda a, b: jnp.logical_or(a != 0, b != 0).astype(a.dtype),
+    lambda a, b: jnp.logical_and(a != 0, b != 0).astype(a.dtype),
+    0.0, 1.0, _seg_max,
+)
+
+REGISTRY: dict[str, Semiring] = {
+    s.name: s
+    for s in (PLUS_TIMES, MIN_PLUS, MAX_PLUS, MAX_MIN, MAX_TIMES, OR_AND)
+}
+
+
+def get(name_or_semiring: "str | Semiring") -> Semiring:
+    if isinstance(name_or_semiring, Semiring):
+        return name_or_semiring
+    try:
+        return REGISTRY[name_or_semiring]
+    except KeyError:
+        raise KeyError(
+            f"unknown semiring {name_or_semiring!r}; "
+            f"available: {sorted(REGISTRY)}") from None

@@ -1,0 +1,4 @@
+from . import tokenizer
+from .stream import SamplerState, TokenStream
+
+__all__ = ["tokenizer", "TokenStream", "SamplerState"]

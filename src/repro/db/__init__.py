@@ -1,0 +1,3 @@
+from .edgestore import EdgeStore, MultiInstanceDB, Tablet
+
+__all__ = ["EdgeStore", "MultiInstanceDB", "Tablet"]

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention.
+
+VMEM tiling: q (1, Bq, Dh), k/v (1, Ck, Dh) per grid step; running
+(m, l, acc) live in VMEM scratch across the sequential KV dimension.
+Causal and sliding-window masking via block-offset iotas.  MXU dims
+(Bq, Ck, Dh) are multiples of 128 in production configs.
+
+Grid: (batch·heads, q blocks, kv blocks) — kv sequential ("arbitrary").
+GQA is handled by the BlockSpec index map (each q head reads its kv
+head's block directly — kv is never repeated in memory).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, causal: bool, window: int,
+                  sm_scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (Bq, Dh)
+    k = k_ref[0].astype(jnp.float32)            # (Ck, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    d = q_pos - k_pos
+    ok = jnp.ones_like(d, dtype=bool)
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh) with H % KV == 0.
+    Returns (B, Sq, H, Dh)."""
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert h % kv == 0 and sq % block_q == 0 and sk % block_k == 0
+    groups = h // kv
+
+    # layout: (B*H, S, Dh) for q/out; (B*KV, S, Dh) for k/v
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, dh)
+
+    def kv_map(bh, qi, kj):
+        batch, head = bh // h, bh % h
+        return (batch * kv + head // groups, kj, 0)
+
+    grid = (b * h, sq // block_q, sk // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          causal=causal, window=window,
+                          sm_scale=dh ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m
+            pltpu.VMEM((block_q,), jnp.float32),       # l
+            pltpu.VMEM((block_q, dh), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,30 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU pass ``interpret=False`` (the default flips on backend);
+this container is CPU-only, so interpret=True executes the kernel bodies
+in Python for correctness validation while the pure-JAX fallbacks serve
+the compiled dry-run path.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .rglru import rglru_scan
+from .segsum import segsum
+from .spmv import csr_to_ell, spmv_ell
+from .wkv6 import wkv6
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+__all__ = [
+    "segsum", "spmv_ell", "csr_to_ell", "flash_attention", "rglru_scan",
+    "wkv6", "on_tpu", "default_interpret",
+]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum_ref(ids: jax.Array, vals: jax.Array, num_segments: int):
+    return jax.ops.segment_sum(vals.astype(jnp.float32), ids,
+                               num_segments=num_segments)
+
+
+def spmv_ell_ref(ecols: jax.Array, evals: jax.Array, x: jax.Array,
+                 ring: str = "plus_times"):
+    """y[r] = ⊕_k evals[r,k] ⊗ x[ecols[r,k]] (cols == -1 are padding)."""
+    xg = jnp.where(ecols >= 0, x[jnp.maximum(ecols, 0)], 0.0)
+    prods = evals.astype(jnp.float32) * xg.astype(jnp.float32)
+    if ring == "plus_times":
+        return jnp.sum(prods, axis=1)
+    if ring == "max_times":
+        return jnp.max(jnp.maximum(prods, 0.0), axis=1)
+    raise ValueError(ring)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    from ..models import layers as L
+    b, sq = q.shape[:2]
+    sk = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    return L.attention_naive(q, k, v, q_pos, k_pos, causal, window)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t, h_0 = 0 — sequential oracle."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, jnp.zeros((a.shape[0], a.shape[2]),
+                                         jnp.float32), (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    from ..models.blocks import wkv_scan
+    b, s, h, dh = r.shape
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    out, _ = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32), w.astype(jnp.float32),
+                      u.astype(jnp.float32), state0)
+    return out.astype(r.dtype)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: ELL-format semiring SpMV (PageRank / background model).
+
+CSR's per-row ragged nnz is hostile to the MXU; the TPU adaptation packs
+rows to ELL (fixed ``k_max`` nnz per row, zero-padded — D4M incidence
+matrices are near-regular: one nnz per header field).  The gather
+``x[cols]`` is realized as a one-hot matmul per nnz-slot, so the whole
+kernel is dense systolic work:
+
+    y[r] ⊕= Σ_k vals[r,k] ⊗ (onehot(cols[r,k]) @ x_tile)
+
+Grid: (row blocks, col tiles); col-tile dimension is sequential so the
+VMEM accumulator is race-free.  plus_times and max_times semirings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, out_ref, *,
+                     block_cols: int, ring: str):
+    ct = pl.program_id(1)
+
+    @pl.when(ct == 0)
+    def _init():
+        if ring == "plus_times":
+            out_ref[...] = jnp.zeros_like(out_ref)
+        else:
+            out_ref[...] = jnp.full_like(out_ref, 0.0)
+
+    cols = cols_ref[...]                         # (BR, Kmax) int32
+    vals = vals_ref[...].astype(jnp.float32)     # (BR, Kmax)
+    x = x_ref[...].astype(jnp.float32)           # (block_cols,)
+    base = ct * block_cols
+    local = cols - base
+    br, kmax = cols.shape
+    acc = out_ref[...]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (br, block_cols), 1)
+    for k in range(kmax):            # Kmax is small and static — unrolled
+        onehot = (iota == local[:, k][:, None]).astype(jnp.float32)
+        gathered = jnp.dot(onehot, x[:, None],
+                           preferred_element_type=jnp.float32)[:, 0]
+        if ring == "plus_times":
+            acc = acc + vals[:, k] * gathered
+        else:                        # max_times
+            hit = (local[:, k] >= 0) & (local[:, k] < block_cols)
+            acc = jnp.maximum(acc, jnp.where(hit, vals[:, k] * gathered,
+                                             acc))
+    out_ref[...] = acc
+
+
+def csr_to_ell(row_ptr, cols, vals, n_rows: int, k_max: int):
+    """Host-side CSR→ELL pack (pad/truncate to k_max nnz per row)."""
+    import numpy as np
+    row_ptr = np.asarray(row_ptr)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    ecols = np.full((n_rows, k_max), -1, np.int32)
+    evals = np.zeros((n_rows, k_max), np.float32)
+    for r in range(n_rows):
+        lo, hi = row_ptr[r], min(row_ptr[r + 1], row_ptr[r] + k_max)
+        n = hi - lo
+        ecols[r, :n] = cols[lo:hi]
+        evals[r, :n] = vals[lo:hi]
+    return jnp.asarray(ecols), jnp.asarray(evals)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols",
+                                             "ring", "interpret"))
+def spmv_ell(ecols: jax.Array, evals: jax.Array, x: jax.Array,
+             block_rows: int = 256, block_cols: int = 1024,
+             ring: str = "plus_times", interpret: bool = True) -> jax.Array:
+    """y = A ⊕.⊗ x with A in ELL (n_rows, k_max)."""
+    n_rows, _ = ecols.shape
+    n_cols = x.shape[0]
+    rpad = (-n_rows) % block_rows
+    cpad = (-n_cols) % block_cols
+    if rpad:
+        ecols = jnp.pad(ecols, ((0, rpad), (0, 0)), constant_values=-1)
+        evals = jnp.pad(evals, ((0, rpad), (0, 0)))
+    if cpad:
+        x = jnp.pad(x, (0, cpad))
+    grid = ((n_rows + rpad) // block_rows, (n_cols + cpad) // block_cols)
+    out = pl.pallas_call(
+        functools.partial(_spmv_ell_kernel, block_cols=block_cols,
+                          ring=ring),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, ecols.shape[1]), lambda r, c: (r, 0)),
+            pl.BlockSpec((block_rows, evals.shape[1]), lambda r, c: (r, 0)),
+            pl.BlockSpec((block_cols,), lambda r, c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda r, c: (r,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows + rpad,), jnp.float32),
+        interpret=interpret,
+    )(ecols, evals, x)
+    return out[:n_rows]

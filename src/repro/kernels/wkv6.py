@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: RWKV-6 chunked WKV recurrence.
+
+Per (batch, head) the state S ∈ (Dh, Dh) is carried in VMEM scratch
+across sequential time chunks; each chunk is three (C×Dh)·(Dh×Dh)-class
+matmuls on the MXU plus a strict-lower-triangular (C×C) intra-chunk
+product — the same factorization as models.blocks.wkv_chunked, so the
+ref oracle is shared.
+
+Grid: (batch·heads, time chunks) — time sequential.
+Inputs are pre-scaled by the wrapper (q_eff, k_in, k_out, total) to keep
+the kernel free of cumulative-log work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, qe_ref, ki_ref, ko_ref, tot_ref,
+                ub_ref, o_ref, s_ref, *, chunk: int):
+    tc = pl.program_id(1)
+
+    @pl.when(tc == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    rq = r_ref[0].astype(jnp.float32)       # (C, Dh)
+    kq = k_ref[0].astype(jnp.float32)
+    vq = v_ref[0].astype(jnp.float32)
+    qe = qe_ref[0].astype(jnp.float32)
+    ki = ki_ref[0].astype(jnp.float32)
+    ko = ko_ref[0].astype(jnp.float32)
+    tot = tot_ref[0].astype(jnp.float32)    # (1, Dh)
+    u = ub_ref[...].astype(jnp.float32)     # (1, Dh)
+    state = s_ref[...]                      # (Dh, Dh)
+
+    inter = jnp.dot(qe, state, preferred_element_type=jnp.float32)
+    scores = jnp.dot(qe, ki.T, preferred_element_type=jnp.float32)
+    c = scores.shape[0]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >
+           jax.lax.broadcasted_iota(jnp.int32, (c, c), 1))
+    scores = jnp.where(tri, scores, 0.0)
+    intra = jnp.dot(scores, vq, preferred_element_type=jnp.float32)
+    diag = jnp.sum(rq * kq * u, axis=-1, keepdims=True) * vq
+    o_ref[0] = (inter + intra + diag).astype(o_ref.dtype)
+    s_ref[...] = state * tot.T + jnp.dot(
+        ko.T, vq, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, chunk: int = 32, interpret: bool = True) -> jax.Array:
+    """r,k,v,w: (B, S, H, Dh); u: (H, Dh). Returns (B, S, H, Dh).
+
+    w is the per-step decay in (0, 1); pre-scaling (cumulative decays)
+    happens here in plain XLA, the sequential state pass in the kernel.
+    """
+    b, s, h, dh = r.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+
+    def reshape(t):  # (B,S,H,Dh) → (B·H, S, Dh)
+        return t.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))
+    cshape = (b * h, n, c, dh)
+    logw = jnp.log(jnp.maximum(wc, 1e-38)).reshape(cshape)
+    cum = jnp.cumsum(logw, axis=2)
+    rcc = rc.reshape(cshape)
+    kcc = kc.reshape(cshape)
+    q_eff = (rcc * jnp.exp(cum - logw)).reshape(b * h, s, dh)
+    k_in = (kcc * jnp.exp(-cum)).reshape(b * h, s, dh)
+    k_out = (kcc * jnp.exp(cum[:, :, -1:, :] - cum)).reshape(b * h, s, dh)
+    total = jnp.exp(cum[:, :, -1, :])                   # (BH, n, Dh)
+    ub = jnp.broadcast_to(u[None], (b, h, dh)).reshape(b * h, dh)
+
+    seq_spec = pl.BlockSpec((1, c, dh), lambda bh, t: (bh, t, 0))
+    grid = (b * h, n)
+    out = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec,               # r, k, v
+            seq_spec, seq_spec, seq_spec,               # qe, ki, ko
+            pl.BlockSpec((1, 1, dh), lambda bh, t: (bh, t, 0)),  # tot
+            pl.BlockSpec((1, dh), lambda bh, t: (bh, 0)),        # u
+        ],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(rc, kc, vc, q_eff, k_in, k_out, total, ub)
+    return out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

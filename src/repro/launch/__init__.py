@@ -1,0 +1,4 @@
+"""repro.launch — meshes, dry-run, training and serving drivers."""
+from .mesh import make_production_mesh, make_smoke_mesh
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]

@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Validate the analytic perf model against XLA cost_analysis.
+
+XLA's cost analysis counts while-loop bodies once (measured), so the
+production scanned modules undercount FLOPs by their trip counts.  Here
+we build **scan-free unit variants** of every architecture — layers
+unrolled (one pattern period), grad_accum=1, naive attention, unrolled
+wkv — where cost_analysis *is* exact, and compare it to the analytic
+model's prediction for the same configuration.  Agreement on the units
+justifies using the analytic model for the full-scale roofline terms.
+
+Writes results/calib/<arch>.json and prints a summary table.
+"""
+import dataclasses
+import json
+
+import jax
+
+from ..configs import ARCHS, get_config
+from ..models.config import ModelConfig, ShapeConfig
+from ..train import OptConfig
+from . import perfmodel as PM
+from .dryrun import RESULTS_DIR, lower_cell
+from .mesh import make_production_mesh
+
+CALIB_DIR = os.path.join(os.path.dirname(RESULTS_DIR), "calib")
+
+
+def unit_config(arch: str) -> ModelConfig:
+    cfg = get_config(arch)
+    period = len(cfg.pattern)
+    return dataclasses.replace(
+        cfg, n_layers=period, scan_layers=False,
+        attention_impl="naive", rwkv_impl="unrolled", rwkv_chunk=8,
+        encoder_layers=2 if cfg.is_encdec else 0,
+        loss_chunk=0)
+
+
+def run_arch(arch: str, force: bool = False) -> dict:
+    os.makedirs(CALIB_DIR, exist_ok=True)
+    path = os.path.join(CALIB_DIR, f"{arch}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = unit_config(arch)
+    shape = ShapeConfig("unit_train", 256, 32, "train")
+    mesh = make_production_mesh()
+    lowered = lower_cell(cfg, shape, mesh, opt=OptConfig(grad_accum=1))
+    compiled = lowered.compile()
+    measured = float(compiled.cost_analysis()["flops"])
+    knobs = PM.PerfKnobs(attention_tri=False, grad_accum=1, remat=True)
+    predicted = PM.cell_perf(arch, shape, "single", knobs, cfg=cfg).flops
+    rec = {"arch": arch, "unit_layers": cfg.n_layers,
+           "measured_flops": measured, "predicted_flops": predicted,
+           "ratio": predicted / measured if measured else float("nan")}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    print(f"{'arch':28s} {'measured':>12s} {'predicted':>12s} {'pred/meas':>9s}")
+    for arch in ARCHS:
+        try:
+            r = run_arch(arch)
+            print(f"{arch:28s} {r['measured_flops']:12.4e} "
+                  f"{r['predicted_flops']:12.4e} {r['ratio']:9.3f}",
+                  flush=True)
+        except Exception as e:
+            print(f"{arch:28s} FAIL {e!r}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

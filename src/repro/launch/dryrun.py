@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the real step function (train_step for train
+shapes, prefill/decode for serving shapes) against ShapeDtypeStruct
+inputs with full production shardings, compiles it for the forced
+512-device CPU topology, and records:
+
+* ``memory_analysis()``  — per-device HBM footprint (proves it fits),
+* ``cost_analysis()``    — HLO FLOPs / bytes for the roofline terms,
+* collective bytes parsed from the HLO (launch.hlo),
+* wall-clock lower/compile times.
+
+Results are cached incrementally in results/dryrun/<cell>.json so the
+full sweep is restartable (same contract as the pipeline journal).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, canonical, get_config
+from ..models import inputs as I
+from ..models import model as M
+from ..models.config import ALL_SHAPES, ModelConfig, shape_by_name
+from ..train import OptConfig, abstract_train_state, sharding as S
+from ..train.trainer import make_decode_step, make_prefill_step, \
+    make_train_step
+from . import hlo
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# Production micro-batching defaults (per arch): chosen so the per-device
+# training working set fits 16 GB v5e HBM (see EXPERIMENTS.md §Perf —
+# activation memory scales linearly with micro-batch).
+TRAIN_GRAD_ACCUM = {
+    "h2o_danube_1_8b": 2, "granite_moe_3b_a800m": 4, "rwkv6_1_6b": 2,
+    "phi3_mini_3_8b": 2, "phi_3_vision_4_2b": 2, "whisper_large_v3": 2,
+    "qwen2_5_14b": 4, "internlm2_20b": 4, "recurrentgemma_9b": 4,
+    "qwen3_moe_235b_a22b": 8,
+}
+
+
+def default_opt(arch: str) -> OptConfig:
+    return OptConfig(grad_accum=TRAIN_GRAD_ACCUM.get(canonical(arch), 2))
+
+
+def _per_device_batch(shape, mesh) -> None:
+    # train shapes must tile the data axes exactly; small serving batches
+    # (long_500k B=1) replicate across data instead (batch_shardings).
+    if shape.kind == "train":
+        data_par = 1
+        for n, s in zip(mesh.axis_names, mesh.devices.shape):
+            if n in ("pod", "data"):
+                data_par *= s
+        assert shape.global_batch % data_par == 0, \
+            (shape.name, shape.global_batch, data_par)
+
+
+def lower_cell(cfg: ModelConfig, shape, mesh, opt: OptConfig = None,
+               profile: str = "2d"):
+    """Build + lower the step function for one cell. Returns lowered."""
+    opt = opt or OptConfig()
+    specs = I.input_specs(cfg, shape)           # raises SkipCell
+    _per_device_batch(shape, mesh)
+    batch_sh = S.batch_shardings(specs, mesh, profile)
+
+    if shape.kind == "train":
+        params, opt_state = abstract_train_state(cfg)
+        p_sh = S.param_shardings(params, mesh, profile)
+        o_sh = {"m": p_sh, "v": p_sh,
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())}
+        step = make_train_step(cfg, opt, mesh, profile)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, batch_sh),
+                         donate_argnums=(0, 1))
+        with mesh:
+            return jitted.lower(params, opt_state, specs)
+
+    params = M.abstract_params(cfg)
+    if getattr(cfg, "serve_param_dtype", None) == "bfloat16":
+        # production serving loads bf16 weights — halves the param-read
+        # memory term and the checkpoint footprint (§Perf decode lever)
+        params = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(
+                sd.shape, jnp.bfloat16 if sd.dtype == jnp.float32
+                else sd.dtype), params)
+    p_sh = S.param_shardings(params, mesh)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, s_max=shape.seq_len, mesh=mesh)
+        jitted = jax.jit(step, in_shardings=(p_sh, batch_sh))
+        with mesh:
+            return jitted.lower(params, specs)
+
+    # decode: one token against a seq_len cache
+    caches = I.cache_specs(cfg, shape)
+    c_sh = S.cache_shardings(caches, mesh)
+    step = make_decode_step(cfg, mesh=mesh)
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, batch_sh),
+                     donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(params, caches, specs)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             cfg_override=None, tag: str = "", force: bool = False,
+             opt_override: OptConfig = None, profile: str = "2d") -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cell = f"{canonical(arch)}__{shape_name}__{mesh_kind}" + \
+        (f"__{tag}" if tag else "")
+    path = os.path.join(RESULTS_DIR, cell + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            cached = json.load(f)
+        if cached.get("ok"):        # cached failures re-run (bugs get fixed)
+            return cached
+
+    cfg = cfg_override or get_config(arch)
+    shape = shape_by_name(shape_name)
+    opt = opt_override or default_opt(arch)
+    record = {"arch": canonical(arch), "shape": shape_name,
+              "mesh": mesh_kind, "tag": tag, "config": cfg.name,
+              "grad_accum": opt.grad_accum if shape_name.startswith("train")
+              else None}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        t0 = time.time()
+        lowered = lower_cell(cfg, shape, mesh, opt=opt, profile=profile)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        # collectives only exist after SPMD partitioning → compiled text
+        hlo_text = compiled.as_text()
+        coll = hlo.collective_bytes(hlo_text)
+        census = hlo.op_census(hlo_text)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        record.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops": float(cost.get("flops", -1)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1)),
+            "collective_bytes": coll,
+            "op_census": census,
+            "memory": {
+                "argument_bytes": int(getattr(mem, "argument_size_in_bytes",
+                                              0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                "code_bytes": int(getattr(mem, "generated_code_size_in_bytes",
+                                          0)),
+            },
+            "n_devices": int(mesh.devices.size),
+        })
+    except I.SkipCell as e:
+        record.update({"ok": True, "skipped": str(e)})
+    except Exception as e:  # record failures — they are bugs to fix
+        record.update({"ok": False, "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]})
+    with open(path + ".tmp", "w") as f:
+        json.dump(record, f, indent=1)
+    os.replace(path + ".tmp", path)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in ALL_SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force)
+                status = ("SKIP: " + rec["skipped"]) if rec.get("skipped") \
+                    else ("OK" if rec.get("ok") else
+                          "FAIL: " + rec.get("error", "?"))
+                mem = rec.get("memory", {})
+                print(f"{rec['arch']:26s} {shape:12s} {mesh_kind:6s} "
+                      f"{status}"
+                      + (f"  temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB"
+                         f" args={mem.get('argument_bytes', 0)/2**30:.2f}GiB"
+                         f" lower={rec.get('lower_s')}s"
+                         f" compile={rec.get('compile_s')}s"
+                         if rec.get("ok") and not rec.get("skipped") else ""),
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""HLO-text analysis: collective bytes + op census for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic;
+this module parses the (lowered or compiled) HLO text and sums operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction, bucketed by op kind.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# shape tokens like f32[16,128]{1,0} or bf16[2,4,8]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# ops appear as  %name = TYPE[...] all-reduce(ARGS), or all-gather-start etc
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind (plus 'total').
+
+    '-done' halves of async pairs are skipped to avoid double counting.
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done.":
+            # async done ops re-mention the payload; skip only *-done calls
+            if re.search(r"(all-gather|all-reduce|reduce-scatter|"
+                         r"all-to-all|collective-permute)-done", line):
+                continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind, args = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(args))
+        if nbytes == 0:
+            # operands referenced by %name only — fall back to result shape
+            pre = line.split("=", 1)[0] + "=" + \
+                line.split("=", 1)[1].split(kind)[0]
+            nbytes = sum(_shape_bytes(d, dims)
+                         for d, dims in _SHAPE_RE.findall(pre))
+        out[kind] += nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "scatter", "gather",
+                                  "transpose", "reshape", "copy",
+                                  "while")) -> Dict[str, int]:
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"= [a-z0-9_\[\]{{}},.]* ?{op}\(",
+                                 hlo_text))
+    return out

@@ -1,0 +1,14 @@
+"""repro.models — 10-architecture model zoo (pure JAX, scan-over-layers)."""
+from . import blocks, inputs, layers, model
+from .config import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, ModelConfig, MoEConfig, ShapeConfig,
+                     shape_by_name)
+from .model import (abstract_params, decode_step, forward, init_cache,
+                    init_params, loss_fn, prefill)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "ShapeConfig", "ALL_SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K", "shape_by_name",
+    "init_params", "abstract_params", "forward", "loss_fn", "prefill",
+    "decode_step", "init_cache", "layers", "blocks", "model", "inputs",
+]

@@ -1,0 +1,630 @@
+"""Transformer / MoE / RG-LRU / RWKV-6 blocks with init + apply.
+
+Every block follows the same contract::
+
+    params = init_<block>(cfg, key)                  # pytree of arrays
+    y, new_cache = apply_<block>(params, x, ctx, cfg)
+
+``ctx`` carries positions, decode caches, and mode.  Parameters are
+stored float32 (master copy) and cast to ``cfg.dtype`` at use — grads
+and optimizer states stay f32 (MaxText convention).
+
+Caches (decode):
+* attention blocks — (B, S_max, KV, Dh) K and V rings + write index,
+* RG-LRU — (B, Dr) hidden state + (B, conv_w-1, Dr) conv tail +
+  a local-attention window cache,
+* RWKV — (B, H, Dh, Dh) wkv state + (B, D) token-shift state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from . import layers as L
+from .config import ATTN, LOCAL_ATTN, MoEConfig, ModelConfig, RGLRU, RWKV
+from .shard_ctx import constrain
+
+Array = jax.Array
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale or fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+@dataclasses.dataclass
+class Ctx:
+    positions: Array                  # (B, S) absolute positions
+    mode: str = "train"               # train | prefill | decode
+    cache: Optional[dict] = None      # per-layer cache pytree (decode)
+    enc_out: Optional[Array] = None   # encoder output (cross-attention)
+    enc_pos: Optional[Array] = None
+
+
+def _c(x, cfg):  # compute-dtype cast
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+# =============================================================================
+# Attention block (A = global, L = sliding window)
+# =============================================================================
+
+def init_attn(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    D = cfg.d_model
+    H, KV = cfg.phys_heads, cfg.phys_kv_heads
+    Dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln": jnp.zeros((D,), jnp.float32),
+        "wq": _dense_init(ks[0], (D, H * Dh)),
+        "wk": _dense_init(ks[1], (D, KV * Dh)),
+        "wv": _dense_init(ks[2], (D, KV * Dh)),
+        "wo": _dense_init(ks[3], (H * Dh, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * Dh,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * Dh,), jnp.float32)
+    return p
+
+
+def head_kv_map(cfg: ModelConfig):
+    """Physical head → physical kv-head index, preserving the LOGICAL
+    GQA grouping for real heads (padded heads map to kv 0, masked)."""
+    import numpy as np
+    groups = cfg.n_heads // cfg.n_kv_heads
+    idx = np.zeros(cfg.phys_heads, np.int32)
+    idx[:cfg.n_heads] = np.arange(cfg.n_heads) // groups
+    return jnp.asarray(idx)
+
+
+def head_mask(cfg: ModelConfig, dtype):
+    """(H_phys,) 1 for real heads, 0 for padding (hard-masks outputs so
+    padded parameters receive zero gradient — math is exactly logical)."""
+    if cfg.phys_heads == cfg.n_heads:
+        return None
+    return (jnp.arange(cfg.phys_heads) < cfg.n_heads).astype(dtype)
+
+
+def _qkv(p, x, cfg):
+    B, S, D = x.shape
+    H, KV = cfg.phys_heads, cfg.phys_kv_heads
+    Dh = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, _c(p["wq"], cfg))
+    k = jnp.einsum("bsd,dh->bsh", x, _c(p["wk"], cfg))
+    v = jnp.einsum("bsd,dh->bsh", x, _c(p["wv"], cfg))
+    if "bq" in p:
+        q = q + _c(p["bq"], cfg)
+        k = k + _c(p["bk"], cfg)
+        v = v + _c(p["bv"], cfg)
+    # pin head axes to the model axis — sharding propagation loses these
+    # through the scan+remat boundary (151 GiB/device without; §Perf)
+    q = constrain(q.reshape(B, S, H, Dh), "batch", None, "model", None)
+    k = constrain(k.reshape(B, S, KV, Dh), "batch", None, "model", None)
+    v = constrain(v.reshape(B, S, KV, Dh), "batch", None, "model", None)
+    return q, k, v
+
+
+class AttnCache(NamedTuple):
+    k: Array          # (B, S_alloc, KV, Dh) — ring buffer for windowed attn
+    v: Array
+    pos: Array        # (B, S_alloc) int32 absolute positions; -1 = empty
+    index: Array      # () int32 — next global write position
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, s_max: int,
+                    window: int = 0) -> AttnCache:
+    """Sliding-window layers allocate only ``window`` slots (ring buffer)
+    — this is what makes long_500k feasible for SWA/hybrid archs."""
+    KV, Dh = cfg.phys_kv_heads, cfg.resolved_head_dim
+    s_alloc = min(window, s_max) if window else s_max
+    dt = jnp.dtype(cfg.dtype)
+    return AttnCache(jnp.zeros((batch, s_alloc, KV, Dh), dt),
+                     jnp.zeros((batch, s_alloc, KV, Dh), dt),
+                     jnp.full((batch, s_alloc), -1, jnp.int32),
+                     jnp.zeros((), jnp.int32))
+
+
+def apply_attn(p: dict, x: Array, ctx: Ctx, cfg: ModelConfig,
+               window: int = 0, rope_on: bool = True):
+    """Self-attention sublayer (pre-norm). Returns (residual_out, cache)."""
+    h = L.rms_norm(x, _c(p["ln"], cfg), cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg)
+    kv_map = head_kv_map(cfg) if cfg.phys_heads != cfg.n_heads else None
+    if rope_on:
+        q = L.rope(q, ctx.positions, cfg.rope_theta)
+        k = L.rope(k, ctx.positions, cfg.rope_theta)
+    new_cache = None
+    if ctx.mode == "decode":
+        cache: AttnCache = ctx.cache
+        s_alloc = cache.k.shape[1]
+        slot = cache.index % s_alloc                   # ring write
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        pos = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, ctx.positions.astype(jnp.int32), slot, axis=1)
+        new_cache = AttnCache(kc, vc, pos, cache.index + x.shape[1])
+        # ring entries carry absolute positions; -1 slots stay masked
+        out = L.attention(q, kc, vc, ctx.positions, pos, causal=True,
+                          window=window, impl="naive", kv_map=kv_map)
+    else:
+        out = L.attention(q, k, v, ctx.positions, ctx.positions,
+                          causal=True, window=window,
+                          impl=cfg.attention_impl, chunk=cfg.attention_chunk,
+                          kv_map=kv_map)
+        if ctx.mode == "prefill" and ctx.cache is not None:
+            cache: AttnCache = ctx.cache
+            s_alloc = cache.k.shape[1]
+            take = min(s_alloc, x.shape[1])
+            # each absolute position p lands at ring slot p % s_alloc, so
+            # decode continues the ring seamlessly after prefill
+            tail_pos = ctx.positions[:, -take:].astype(jnp.int32)
+            slots = tail_pos[0] % s_alloc
+            kc = cache.k.at[:, slots].set(k[:, -take:])
+            vc = cache.v.at[:, slots].set(v[:, -take:])
+            pos = cache.pos.at[:, slots].set(tail_pos)
+            new_cache = AttnCache(kc, vc, pos,
+                                  jnp.asarray(x.shape[1], jnp.int32))
+    B, S = x.shape[:2]
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:   # zero padded-head outputs → exact logical math
+        out = out * hm[None, None, :, None]
+    out = out.reshape(B, S, -1)
+    proj = checkpoint_name(
+        jnp.einsum("bsh,hd->bsd", out, _c(p["wo"], cfg)), "tp_out")
+    return x + proj, new_cache
+
+
+def apply_cross_attn(p: dict, x: Array, ctx: Ctx, cfg: ModelConfig):
+    """Encoder–decoder cross-attention (whisper). No cache mutation:
+    encoder K/V are recomputed from enc_out (could be cached; cheap)."""
+    B, S, D = x.shape
+    H, KV = cfg.phys_heads, cfg.phys_kv_heads
+    Dh = cfg.resolved_head_dim
+    h = L.rms_norm(x, _c(p["ln"], cfg), cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, _c(p["wq"], cfg)).reshape(B, S, H, Dh)
+    enc = ctx.enc_out
+    k = jnp.einsum("bsd,dh->bsh", enc, _c(p["wk"], cfg)) \
+        .reshape(B, enc.shape[1], KV, Dh)
+    v = jnp.einsum("bsd,dh->bsh", enc, _c(p["wv"], cfg)) \
+        .reshape(B, enc.shape[1], KV, Dh)
+    kv_map = head_kv_map(cfg) if cfg.phys_heads != cfg.n_heads else None
+    out = L.attention(q, k, v, ctx.positions, ctx.enc_pos, causal=False,
+                      impl="naive" if enc.shape[1] <= cfg.attention_chunk
+                      else cfg.attention_impl, chunk=cfg.attention_chunk,
+                      kv_map=kv_map)
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    return x + jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1),
+                          _c(p["wo"], cfg))
+
+
+# =============================================================================
+# MLP / MoE
+# =============================================================================
+
+def init_mlp(cfg: ModelConfig, key) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.zeros((D,), jnp.float32),
+        "w_gate": _dense_init(ks[0], (D, F)),
+        "w_up": _dense_init(ks[1], (D, F)),
+        "w_down": _dense_init(ks[2], (F, D)),
+    }
+
+
+def apply_mlp(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    h = L.rms_norm(x, _c(p["ln"], cfg), cfg.norm_eps)
+    return x + L.swiglu(h, _c(p["w_gate"], cfg), _c(p["w_up"], cfg),
+                        _c(p["w_down"], cfg))
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((D,), jnp.float32),
+        "router": _dense_init(ks[0], (D, E)),
+        "w_gate": _dense_init(ks[1], (E, D, F)),
+        "w_up": _dense_init(ks[2], (E, D, F)),
+        "w_down": _dense_init(ks[3], (E, F, D)),
+    }
+
+
+def _token_choice_dispatch(probs: Array, k: int, capacity: int):
+    """Sort-based token-choice routing (no (T,E,C) mask).
+
+    Returns (slot, keep, gate) each (T·k,): target slot = expert·C + rank,
+    keep = rank < C, gate = renormalized top-k prob.
+    """
+    T, E = probs.shape
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)         # renorm (qwen3)
+    flat_e = expert_ids.reshape(-1)                          # (T·k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(flat_e), flat_e,
+                                 num_segments=E)
+    starts = jnp.cumsum(counts) - counts                     # (E,)
+    ranks_sorted = jnp.arange(flat_e.shape[0]) - starts[sorted_e]
+    ranks = jnp.zeros_like(ranks_sorted).at[order].set(ranks_sorted)
+    keep = ranks < capacity
+    slot = flat_e * capacity + jnp.minimum(ranks, capacity - 1)
+    return slot, keep, gate_vals.reshape(-1)
+
+
+def apply_moe(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Mixture-of-experts FFN, token-choice top-k with capacity.
+
+    The dispatch is an *incidence matrix* (token → expert) — the same
+    sparse structure as the paper's D4M schema — realized as a sorted
+    scatter/gather (segment algebra) rather than a dense (T,E,C) mask.
+
+    Routing is **per sequence** (vmapped over batch): the sort/scatter
+    stays local to each data shard.  A global-token argsort forces XLA
+    to all-gather the batch and replicate giant scatter-index tensors
+    (measured: 92 GiB/device on granite — see EXPERIMENTS.md §Perf).
+    """
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    C = int(m.capacity_factor * S * k / E)       # capacity per sequence
+    C = max((C + 7) // 8 * 8, 8)
+    h = L.rms_norm(x, _c(p["ln"], cfg), cfg.norm_eps)      # (B, S, D)
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if m.router == "expert_choice":
+        # experts pick their top-C tokens per sequence
+        g, idx = jax.lax.top_k(probs.swapaxes(1, 2), C)      # (B, E, C)
+        xe = jnp.take_along_axis(
+            h[:, None], idx[..., None], axis=2)              # (B, E, C, D)
+        ye = _expert_ffn(p, xe, cfg)
+        out = jax.vmap(lambda y, i, gg: jax.ops.segment_sum(
+            (y * gg[..., None].astype(y.dtype)).reshape(E * C, D),
+            i.reshape(-1), num_segments=S))(ye, idx, g)
+    else:
+        def route_one(probs_s, h_s):
+            """One sequence: (S, E) probs, (S, D) tokens."""
+            slot, keep, gate = _token_choice_dispatch(probs_s, k, C)
+            tok = jnp.repeat(jnp.arange(S), k)
+            safe = jnp.where(keep, slot, E * C)              # dropped → OOB
+            xe = jnp.zeros((E * C, D), h_s.dtype).at[safe].set(
+                jnp.take(h_s, tok, axis=0), mode="drop")
+            return xe.reshape(E, C, D), slot, keep, gate, tok
+
+        xe, slot, keep, gate, tok = jax.vmap(route_one)(probs, h)
+        ye = _expert_ffn(p, xe, cfg)                         # (B, E, C, D)
+
+        def combine_one(y, sl, kp, gt, tk):
+            contrib = jnp.take(y.reshape(E * C, D),
+                               jnp.minimum(sl, E * C - 1), axis=0)
+            contrib *= (gt * kp).astype(contrib.dtype)[:, None]
+            return jax.ops.segment_sum(contrib, tk, num_segments=S)
+
+        out = jax.vmap(combine_one)(ye, slot, keep, gate, tok)
+    out = checkpoint_name(
+        constrain(out.astype(x.dtype), "batch", None, None), "tp_out")
+    return x + out
+
+
+def _expert_ffn(p, xe, cfg):
+    """(B, E, C, D) → (B, E, C, D) batched expert SwiGLU (EP over E)."""
+    xe = constrain(xe, "batch", "model", None, None)
+    g = jnp.einsum("becd,edf->becf", xe, _c(p["w_gate"], cfg))
+    u = jnp.einsum("becd,edf->becf", xe, _c(p["w_up"], cfg))
+    return jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                      _c(p["w_down"], cfg))
+
+
+# =============================================================================
+# RG-LRU recurrent block (Griffin / recurrentgemma)
+# =============================================================================
+
+def init_rglru(cfg: ModelConfig, key) -> dict:
+    D, Dr, W = cfg.d_model, cfg.d_rnn_resolved, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.zeros((D,), jnp.float32),
+        "wx": _dense_init(ks[0], (D, Dr)),
+        "wg": _dense_init(ks[1], (D, Dr)),
+        "conv_k": _dense_init(ks[2], (W, Dr), scale=W ** -0.5),
+        "conv_b": jnp.zeros((Dr,), jnp.float32),
+        "wa": _dense_init(ks[3], (Dr, Dr)),      # recurrence gate
+        "wi": _dense_init(ks[4], (Dr, Dr)),      # input gate
+        "lam": jnp.linspace(0.9, 5.0, Dr).astype(jnp.float32),  # Λ
+        "wo": _dense_init(ks[5], (Dr, D)),
+    }
+
+
+class RGLRUCache(NamedTuple):
+    h: Array          # (B, Dr) hidden state
+    conv: Array       # (B, conv_w-1, Dr) conv tail
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> RGLRUCache:
+    Dr = cfg.d_rnn_resolved
+    dt = jnp.dtype(cfg.dtype)
+    return RGLRUCache(jnp.zeros((batch, Dr), jnp.float32),
+                      jnp.zeros((batch, cfg.conv_width - 1, Dr), dt))
+
+
+def _rglru_gates(p, xc, cfg):
+    """log_a (decay) and gated input for the linear recurrence."""
+    c_const = 8.0
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xc, _c(p["wa"], cfg))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xc, _c(p["wi"], cfg))
+                       .astype(jnp.float32))
+    log_a = -c_const * jax.nn.softplus(p["lam"]) * r          # (..., Dr)
+    a = jnp.exp(log_a)
+    # sqrt(1-a²) normalization keeps the state scale input-independent
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * \
+        (i * xc.astype(jnp.float32))
+    return a, b
+
+
+def apply_rglru(p: dict, x: Array, ctx: Ctx, cfg: ModelConfig):
+    """Griffin recurrent block: proj → causal conv → RG-LRU → gated out."""
+    B, S, D = x.shape
+    h_in = L.rms_norm(x, _c(p["ln"], cfg), cfg.norm_eps)
+    xb = jnp.einsum("bsd,de->bse", h_in, _c(p["wx"], cfg))
+    gate = jnp.einsum("bsd,de->bse", h_in, _c(p["wg"], cfg))
+    W = cfg.conv_width
+    new_cache = None
+    if ctx.mode == "decode":
+        cache: RGLRUCache = ctx.cache
+        ext = jnp.concatenate([cache.conv, xb], axis=1)       # (B, W-1+S, Dr)
+        conv_in = ext
+        new_tail = ext[:, -(W - 1):]
+    else:
+        conv_in = jnp.pad(xb, ((0, 0), (W - 1, 0), (0, 0)))
+        # prefill: keep the last W-1 inputs so decode continues the conv
+        new_tail = conv_in[:, -(W - 1):] if W > 1 else \
+            jnp.zeros((B, 0, xb.shape[-1]), xb.dtype)
+    xc = sum(conv_in[:, i:i + S] * _c(p["conv_k"][i], cfg)
+             for i in range(W)) + _c(p["conv_b"], cfg)
+    a, b = _rglru_gates(p, xc, cfg)
+    if ctx.mode == "decode" and S == 1:
+        cache: RGLRUCache = ctx.cache
+        h_new = a[:, 0] * cache.h + b[:, 0]                   # (B, Dr)
+        states = h_new[:, None]
+        new_cache = RGLRUCache(h_new, new_tail)
+    elif cfg.rglru_impl == "pallas" and ctx.mode == "prefill":
+        # TPU kernel path (interpret on CPU); forward-only, so prefill
+        from ..kernels.rglru import rglru_scan as _rglru_kernel
+        from ..kernels.ops import default_interpret
+        states = _rglru_kernel(a, b, interpret=default_interpret()
+                               ).astype(jnp.float32)
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        states = b_s                                          # h_t, (B,S,Dr)
+    if ctx.mode == "prefill" and new_cache is None and S > 1:
+        new_cache = RGLRUCache(states[:, -1].astype(jnp.float32), new_tail)
+    out = states.astype(x.dtype) * jax.nn.gelu(gate)
+    proj = checkpoint_name(
+        jnp.einsum("bse,ed->bsd", out, _c(p["wo"], cfg)), "tp_out")
+    return x + proj, new_cache
+
+
+# =============================================================================
+# RWKV-6 block (Finch): data-dependent decay time-mix + channel-mix
+# =============================================================================
+
+def init_rwkv(cfg: ModelConfig, key) -> dict:
+    D, F, Lw = cfg.d_model, cfg.d_ff, cfg.decay_lora
+    ks = jax.random.split(key, 12)
+    H = cfg.n_heads
+    Dh = D // H
+    return {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        # token-shift lerp coefficients for r,k,v,w,g
+        "mu": 0.5 * jnp.ones((5, D), jnp.float32),
+        "wr": _dense_init(ks[0], (D, D)),
+        "wk": _dense_init(ks[1], (D, D)),
+        "wv": _dense_init(ks[2], (D, D)),
+        "wgate": _dense_init(ks[3], (D, D)),
+        # data-dependent decay LoRA: w = exp(-exp(bias + tanh(x A) B))
+        "dw_a": _dense_init(ks[4], (D, Lw)),
+        "dw_b": _dense_init(ks[5], (Lw, D), scale=0.01),
+        "dw_bias": -6.0 * jnp.ones((D,), jnp.float32),
+        "u": jnp.zeros((H, Dh), jnp.float32),                # bonus
+        "ln_x": jnp.zeros((D,), jnp.float32),                # per-head norm
+        "wo": _dense_init(ks[6], (D, D)),
+        # channel mix
+        "ln2": jnp.zeros((D,), jnp.float32),
+        "mu_c": 0.5 * jnp.ones((2, D), jnp.float32),
+        "ck": _dense_init(ks[7], (D, F)),
+        "cv": _dense_init(ks[8], (F, D)),
+        "cr": _dense_init(ks[9], (D, D)),
+    }
+
+
+class RWKVCache(NamedTuple):
+    wkv: Array       # (B, H, Dh, Dh) state (k-major)
+    shift1: Array    # (B, D) last token (time-mix shift)
+    shift2: Array    # (B, D) last token (channel-mix shift)
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> RWKVCache:
+    D, H = cfg.d_model, cfg.n_heads
+    Dh = D // H
+    dt = jnp.dtype(cfg.dtype)
+    return RWKVCache(jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+                     jnp.zeros((batch, D), dt), jnp.zeros((batch, D), dt))
+
+
+def wkv_scan(r, k, v, w, u, state0):
+    """Reference WKV recurrence (also the decode step).
+
+    r,k,v: (B,S,H,Dh); w: (B,S,H,Dh) decay in (0,1); u: (H,Dh) bonus.
+    state: (B,H,Dh_k,Dh_v).  out_t = r_t · (state + u⊙k_t ⊗ v_t).
+    """
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs            # (B,H,Dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         state + u[None, :, :, None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), state     # (B,S,H,Dh), final state
+
+
+def _wkv_unrolled(r, k, v, w, u, state0):
+    """Python-unrolled wkv_scan (small S only; calibration path)."""
+    outs = []
+    state = state0
+    for t in range(r.shape[1]):
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        outs.append(jnp.einsum("bhk,bhkv->bhv", r[:, t],
+                               state + u[None, :, :, None] * kv))
+        state = w[:, t][..., None] * state + kv
+    return jnp.stack(outs, axis=1), state
+
+
+def wkv_chunked(r, k, v, w, u, state0, chunk: int = 32):
+    """Chunked-parallel WKV (matmul form — the MXU-friendly lowering).
+
+    Splits S into chunks of C; within a chunk the causal interaction is a
+    strict-lower-triangular (C×C) matmul pair; across chunks the state is
+    carried by a scan.  Matches :func:`wkv_scan` to fp32 tolerance.
+
+    Numerics: intra-chunk scores factor as
+    ``(r_t ⊙ Πw_{<t}) · (k_s ⊘ Πw_{≤s})`` — the second factor grows like
+    exp(|Σ log w|) over a chunk, so the decode path clips log-decay
+    (see apply_rwkv) and C stays ≤ 32 to keep it inside f32 range.
+    """
+    B, S, H, Dh = r.shape
+    C = min(chunk, S)
+    assert S % C == 0
+    n = S // C
+
+    def reshape(t):  # (B,S,H,Dh) → (n,B,H,C,Dh)
+        return t.reshape(B, n, C, H, Dh).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-38))                    # (n,B,H,C,Dh)
+    cum = jnp.cumsum(logw, axis=3)                            # inclusive Πw_{≤t}
+    q_eff = rc * jnp.exp(cum - logw)                          # r_t ⊙ Πw_{<t}
+    k_in = kc * jnp.exp(-cum)                                 # k_s ⊘ Πw_{≤s}
+    total = jnp.exp(cum[:, :, :, -1:, :])                     # full-chunk decay
+    k_out = kc * jnp.exp(cum[:, :, :, -1:, :] - cum)          # decay s→chunk end
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
+
+    def step(state, xs):
+        rq, kq, vq, qe, ki, ko, tot = xs
+        # inter-chunk: queries read the carried state through decay-in
+        inter = jnp.einsum("bhck,bhkv->bhcv", qe, state)
+        # intra-chunk strict-causal attention
+        scores = jnp.einsum("bhck,bhsk->bhcs", qe, ki) * tri
+        intra = jnp.einsum("bhcs,bhsv->bhcv", scores, vq)
+        # diagonal bonus: r_t · (u ⊙ k_t) v_t
+        diag = jnp.einsum("bhck,hk->bhc", rq * kq, u)[..., None] * vq
+        out = inter + intra + diag
+        # state: decay across the chunk + end-decayed contributions
+        state = state * tot.swapaxes(-1, -2) + \
+            jnp.einsum("bhsk,bhsv->bhkv", ko, vq)
+        return state, out
+
+    xs = (rc, kc, vc, q_eff, k_in, k_out, total)
+    state, outs = jax.lax.scan(step, state0, xs)
+    outs = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh)
+    return outs, state
+
+
+def _ddlerp(x, xprev, mu):
+    return x + (xprev - x) * mu
+
+
+def apply_rwkv(p: dict, x: Array, ctx: Ctx, cfg: ModelConfig):
+    """RWKV-6 time-mix + channel-mix (pre-norm residual pair)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    Dh = D // H
+    cache: Optional[RWKVCache] = ctx.cache
+    # ---- time mix ----
+    h = L.rms_norm(x, _c(p["ln1"], cfg), cfg.norm_eps)
+    if ctx.mode == "decode" and cache is not None:
+        prev = jnp.concatenate([cache.shift1[:, None], h[:, :-1]], axis=1)
+    else:
+        prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mu = _c(p["mu"], cfg)
+    xr, xk, xv, xw, xg = (_ddlerp(h, prev, mu[i]) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, _c(p["wr"], cfg)).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", xk, _c(p["wk"], cfg)).reshape(B, S, H, Dh)
+    v = jnp.einsum("bsd,de->bse", xv, _c(p["wv"], cfg)).reshape(B, S, H, Dh)
+    g = jnp.einsum("bsd,de->bse", xg, _c(p["wgate"], cfg))
+    dw = p["dw_bias"] + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32),
+                            p["dw_a"])), p["dw_b"])
+    # clip keeps the chunked form's exp(±Σ log w) inside f32 range
+    w = jnp.exp(-jnp.exp(jnp.minimum(dw, 0.5))).reshape(B, S, H, Dh)
+    state0 = cache.wkv if (ctx.mode == "decode" and cache is not None) \
+        else jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if cfg.rwkv_impl == "unrolled" and ctx.mode != "decode":
+        # python-unrolled time loop: scan-free HLO for cost-analysis
+        # calibration (XLA while bodies are counted once — see §Roofline)
+        out, state = _wkv_unrolled(rf, kf, vf, w.astype(jnp.float32),
+                                   p["u"], state0)
+    elif cfg.rwkv_impl == "pallas" and ctx.mode == "prefill" and \
+            S % cfg.rwkv_chunk == 0 and S >= cfg.rwkv_chunk:
+        # TPU kernel path (interpret on CPU); forward-only → prefill.
+        # The kernel starts from a zero state; the final state for the
+        # decode hand-off is recovered with one chunked pass... the
+        # kernel does not return state, so recompute it cheaply:
+        from ..kernels.wkv6 import wkv6 as _wkv_kernel
+        from ..kernels.ops import default_interpret
+        out = _wkv_kernel(rf, kf, vf, w.astype(jnp.float32), p["u"],
+                          chunk=cfg.rwkv_chunk,
+                          interpret=default_interpret())
+        _, state = wkv_chunked(rf, kf, vf, w.astype(jnp.float32),
+                               p["u"], state0, chunk=cfg.rwkv_chunk)
+    elif ctx.mode == "decode" or cfg.rwkv_impl == "scan" or \
+            S % cfg.rwkv_chunk not in (0,) or S < cfg.rwkv_chunk:
+        out, state = wkv_scan(rf, kf, vf, w.astype(jnp.float32),
+                              p["u"], state0)
+    else:
+        out, state = wkv_chunked(rf, kf, vf, w.astype(jnp.float32),
+                                 p["u"], state0, chunk=cfg.rwkv_chunk)
+    out = out.reshape(B, S, D)
+    out = L.rms_norm(out.astype(x.dtype), _c(p["ln_x"], cfg), cfg.norm_eps)
+    out = out * jax.nn.silu(g)
+    x = x + jnp.einsum("bsd,de->bse", out, _c(p["wo"], cfg))
+    # ---- channel mix ----
+    h2 = L.rms_norm(x, _c(p["ln2"], cfg), cfg.norm_eps)
+    if ctx.mode == "decode" and cache is not None:
+        prev2 = jnp.concatenate([cache.shift2[:, None], h2[:, :-1]], axis=1)
+    else:
+        prev2 = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mu_c = _c(p["mu_c"], cfg)
+    xk2 = _ddlerp(h2, prev2, mu_c[0])
+    xr2 = _ddlerp(h2, prev2, mu_c[1])
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk2, _c(p["ck"], cfg))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, _c(p["cv"], cfg))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, _c(p["cr"], cfg)))
+    x = x + rr * vv
+    new_cache = None
+    if ctx.mode in ("decode", "prefill"):
+        new_cache = RWKVCache(state, h[:, -1], h2[:, -1])
+    return x, new_cache

@@ -1,0 +1,101 @@
+"""Input specifications per (architecture × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.  ``make_batch`` materializes small concrete batches for
+smoke tests.
+
+Applicability rules (DESIGN.md §Arch-applicability):
+* ``long_500k`` only for sub-quadratic archs (SSM / hybrid / SWA);
+* enc-dec (whisper) skips ``long_500k`` (not sub-quadratic) and supplies
+  precomputed ``enc_out`` for decode shapes;
+* ``[audio]``/``[vlm]`` stubs provide frame/patch embeddings directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+class SkipCell(Exception):
+    """Raised when an (arch × shape) cell is architecturally undefined."""
+
+
+def check_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """Return a skip-reason string, or None if the cell runs."""
+    if shape.name == "long_500k":
+        if cfg.is_encdec:
+            return ("enc-dec: source is 30s/1500 frames; 500k-token decode "
+                    "is architecturally undefined")
+        if not cfg.sub_quadratic:
+            return ("pure full-attention arch: 500k KV cache is the "
+                    "subject of a different paper (per assignment, skipped)")
+    return None
+
+
+def _batch_dims(cfg: ModelConfig, shape: ShapeConfig,
+                data_shards: int = 1) -> int:
+    b = shape.global_batch
+    assert b % data_shards == 0 or data_shards == 1
+    return b
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for the lowered step function of this cell."""
+    reason = check_applicable(cfg, shape)
+    if reason:
+        raise SkipCell(reason)
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train":
+        spec = {"tokens": SDS((B, S), i32), "labels": SDS((B, S), i32)}
+        if cfg.frontend == "vision":
+            spec["img_embeds"] = SDS((B, cfg.n_img_tokens, D), f32)
+        if cfg.is_encdec:
+            spec["frames"] = SDS((B, cfg.encoder_seq, D), f32)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": SDS((B, S), i32)}
+        if cfg.frontend == "vision":
+            spec["img_embeds"] = SDS((B, cfg.n_img_tokens, D), f32)
+        if cfg.is_encdec:
+            spec["frames"] = SDS((B, cfg.encoder_seq, D), f32)
+        return spec
+    # decode: one new token against caches of length seq_len
+    spec = {"tokens": SDS((B, 1), i32), "positions": SDS((B, 1), i32)}
+    if cfg.is_encdec:
+        spec["enc_out"] = SDS((B, cfg.encoder_seq, D), f32)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract decode caches for this cell (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete small batch (smoke tests) matching input_specs."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in input_specs(cfg, shape).items():
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            hi = cfg.vocab if k in ("tokens", "labels") else shape.seq_len
+            out[k] = jnp.asarray(
+                rng.integers(0, hi, size=s.shape), s.dtype)
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(0, 1, size=s.shape).astype(np.float32), s.dtype)
+    return out

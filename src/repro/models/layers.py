@@ -1,0 +1,290 @@
+"""Core neural layers — pure JAX, shard_map/pjit friendly.
+
+Attention implementations:
+
+* ``naive``   — materializes (S, S) scores; only for tiny smoke tests.
+* ``chunked`` — two-level blocked online-softmax (flash-style) in pure
+  jax.lax: outer scan over Q blocks, inner scan over KV blocks.  This is
+  the default lowering for the dry-run: O(Bq·Ck) score tiles instead of
+  O(S²), XLA counts its FLOPs, and it maps 1:1 onto the Pallas kernel
+  (repro.kernels.flash_attention) used on real TPUs.
+* ``chunked_tri`` — statically-unrolled triangular schedule (skips
+  fully-masked KV blocks; ~2× FLOP reduction for causal, window/S for
+  sliding-window).  The §Perf hillclimb measures exactly this delta.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from .shard_ctx import constrain
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    out = out.astype(dt)
+    if out.ndim == 3:
+        # keep activations batch-sharded: without this, SPMD re-shards
+        # (B,S,D) to batch-replicated/D-sharded to match the FSDP weight
+        # layout, replicating the whole batch on every device (§Perf)
+        out = constrain(out, "batch", None, None)
+    return out
+
+
+def rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """Rotary embedding. x: (..., S, H, Dh), positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _expand_kv(k: Array, n_heads: int, kv_map: Array = None) -> Array:
+    """GQA: repeat KV heads to match query heads. (B,S,KV,Dh)→(B,S,H,Dh).
+    ``kv_map`` (head-padded archs) gives an explicit head→kv index that
+    preserves the logical grouping (see blocks.head_kv_map)."""
+    b, s, kv, dh = k.shape
+    if kv_map is not None:
+        return jnp.take(k, kv_map, axis=2)
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool,
+               window: int = 0) -> Array:
+    """(…,Sq,Sk) additive bias: 0 where visible, -inf where masked.
+    k_pos < 0 marks invalid (unwritten ring-buffer) cache slots."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = (k_pos >= 0)[..., None, :]
+    if causal:
+        ok &= d >= 0
+    if window:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_naive(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                    causal: bool = True, window: int = 0,
+                    kv_map: Array = None) -> Array:
+    """Reference attention. q: (B,Sq,H,Dh) k,v: (B,Sk,KV,Dh)."""
+    h = q.shape[2]
+    k = _expand_kv(k, h, kv_map)
+    v = _expand_kv(v, h, kv_map)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores += _mask_bias(q_pos, k_pos, causal, window)[:, None]
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _online_block(q_blk, k_blk, v_blk, bias, carry):
+    """One online-softmax update. q_blk:(B,Bq,H,Dh), k/v:(B,Ck,H,Dh),
+    bias:(B,Bq,Ck) or broadcastable; carry=(m,l,acc)."""
+    m, l, acc = carry
+    scale = q_blk.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias[:, None]                       # (B,H,Bq,Ck)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+        preferred_element_type=jnp.float32)
+    return (m_new, l_new, acc_new)
+
+
+def attention_chunked(q: Array, k: Array, v: Array, q_pos: Array,
+                      k_pos: Array, causal: bool = True, window: int = 0,
+                      chunk: int = 1024, triangular: bool = False,
+                      kv_map: Array = None) -> Array:
+    """Blocked online-softmax attention (flash-style, pure lax).
+
+    ``triangular=True`` statically skips KV blocks that are fully masked
+    (causal upper triangle / outside the sliding window) — the outer Q
+    loop unrolls so each Q block's inner scan has static length.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    k = constrain(_expand_kv(k, h, kv_map), "batch", None, "model", None)
+    v = constrain(_expand_kv(v, h, kv_map), "batch", None, "model", None)
+    bq = min(chunk, sq)
+    ck = min(chunk, sk)
+    # pad ragged edges; padded K slots get k_pos = -1 (always masked) and
+    # padded Q rows are sliced off the output.
+    sq0 = sq
+    if sq % bq:
+        pad = bq - sq % bq
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+        sq += pad
+    if sk % ck:
+        pad = ck - sk % ck
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        sk += pad
+    n_q, n_k = sq // bq, sk // ck
+
+    kb = k.reshape(b, n_k, ck, h, dh)
+    vb = v.reshape(b, n_k, ck, h, dh)
+    kp = k_pos.reshape(*k_pos.shape[:-1], n_k, ck)
+
+    def q_block(qi_static, q_blk, qp_blk, lo, hi):
+        """Process one Q block against KV blocks [lo, hi)."""
+        m0 = jnp.full((b, h, q_blk.shape[1]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_blk.shape[1]), jnp.float32)
+        a0 = jnp.zeros((b, h, q_blk.shape[1], dh), jnp.float32)
+
+        # checkpoint: the backward recomputes the (Bq,Ck) probability tile
+        # from q/k instead of saving it per step — the flash-attention
+        # backward contract (O(Bq·Dh) residuals instead of O(Bq·Ck)).
+        @jax.checkpoint
+        def body(carry, j):
+            k_blk = kb[:, j]
+            v_blk = vb[:, j]
+            bias = _mask_bias(qp_blk, kp[:, j], causal, window)
+            return _online_block(q_blk, k_blk, v_blk, bias, carry), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), jnp.arange(lo, hi))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2).astype(q.dtype)     # (B,Bq,H,Dh)
+
+    qb = q.reshape(b, n_q, bq, h, dh)
+    qp = q_pos.reshape(*q_pos.shape[:-1], n_q, bq)
+
+    if triangular:
+        outs = []
+        for i in range(n_q):
+            if causal and window:
+                lo = max(0, (i * bq - window) // ck)
+            else:
+                lo = 0
+            hi = min(i * bq // ck + 1, n_k) if causal else n_k
+            outs.append(q_block(i, qb[:, i], qp[:, i], lo, hi))
+        return jnp.concatenate(outs, axis=1)[:, :sq0]
+
+    def outer(_, i):
+        return None, q_block(None, qb[:, i], qp[:, i], 0, n_k)
+
+    _, outs = jax.lax.scan(outer, None, jnp.arange(n_q))
+    # outs: (n_q, B, Bq, H, Dh) → (B, S, H, Dh)
+    return outs.swapaxes(0, 1).reshape(b, sq, h, dh)[:, :sq0]
+
+
+def attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+              impl="chunked", chunk=1024, kv_map=None):
+    if impl == "pallas" and _pallas_attention_ok(q, k, chunk, kv_map):
+        # TPU fast path (interpret=True on CPU). Forward-only: the Pallas
+        # primitive has no VJP — training uses the chunked lowering.
+        from ..kernels.flash_attention import flash_attention
+        from ..kernels.ops import default_interpret
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=min(chunk, 256),
+                               block_k=min(chunk, 256),
+                               interpret=default_interpret())
+    if impl == "naive" or q.shape[1] <= chunk:
+        return attention_naive(q, k, v, q_pos, k_pos, causal, window,
+                               kv_map=kv_map)
+    if impl in ("chunked", "pallas"):
+        return attention_chunked(q, k, v, q_pos, k_pos, causal, window,
+                                 chunk=chunk, triangular=False,
+                                 kv_map=kv_map)
+    if impl == "chunked_tri":
+        return attention_chunked(q, k, v, q_pos, k_pos, causal, window,
+                                 chunk=chunk, triangular=True, kv_map=kv_map)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def _pallas_attention_ok(q, k, chunk, kv_map) -> bool:
+    """Kernel preconditions: no GQA remap table, block-divisible seqs,
+    fresh contiguous positions (the kernel derives positions from block
+    indices — ring-buffer decode uses the naive path)."""
+    bq = min(chunk, 256, q.shape[1])
+    bk = min(chunk, 256, k.shape[1])
+    return (kv_map is None and q.shape[1] > 1
+            and q.shape[1] % bq == 0 and k.shape[1] % bk == 0
+            and q.shape[2] % k.shape[2] == 0)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = constrain(jnp.einsum("bsd,df->bsf", x, w_gate),
+                  "batch", None, "model")
+    u = constrain(jnp.einsum("bsd,df->bsf", x, w_up),
+                  "batch", None, "model")
+    # tag: output of the TP-contracted matmul (all-reduce point) — the
+    # block_save_coll remat policy keeps this, skipping collective replay
+    return checkpoint_name(
+        jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down), "tp_out")
+
+
+def gelu_mlp(x: Array, w_in: Array, b_in: Array, w_out: Array,
+             b_out: Array) -> Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_in) + b_in)
+    return jnp.einsum("bsf,fd->bsd", h, w_out) + b_out
+
+
+def cross_entropy(logits: Array, labels: Array,
+                  ignore_id: int = -100) -> Array:
+    """Token-mean CE. logits: (B,S,V) any float dtype; labels: (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(x: Array, w_head: Array, labels: Array,
+                          n_chunks: int, ignore_id: int = -100,
+                          valid_vocab: int = 0) -> Array:
+    """Cross-entropy without materializing full (B,S,V) logits: the
+    sequence axis is processed in chunks through the LM head.  A §Perf
+    memory-term optimization (see EXPERIMENTS.md)."""
+    b, s, d = x.shape
+    cs = s // n_chunks
+    assert s % n_chunks == 0
+    v = w_head.shape[-1]
+    pad_mask = jnp.where(jnp.arange(v) < valid_vocab, 0.0, -1e9) \
+        if valid_vocab and valid_vocab != v else None
+
+    def body(carry, i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * cs, cs, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", xs, w_head,
+                            preferred_element_type=jnp.float32)
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        mask = (ls != ignore_id).astype(jnp.float32)
+        nll_sum, n_tok = carry
+        return (nll_sum + jnp.sum((lse - gold) * mask),
+                n_tok + jnp.sum(mask)), None
+
+    (nll, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                               jnp.arange(n_chunks))
+    return nll / jnp.maximum(n, 1.0)

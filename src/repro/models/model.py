@@ -1,0 +1,341 @@
+"""Model assembly: init, forward, loss, prefill/decode — all 10 archs.
+
+Layers are grouped by the config's block ``pattern`` and executed with
+``lax.scan`` over stacked per-group parameters (one trace per period —
+the only way a 94-layer MoE lowers in reasonable time, and the structure
+MaxText uses in production).  Hybrids (e.g. Griffin's R,R,L period) scan
+over full periods; leftover tail layers run unrolled.
+
+Modes:
+* ``train``   — full-sequence forward, loss over shifted labels.
+* ``prefill`` — full-sequence forward building decode caches.
+* ``decode``  — single-token step consuming/updating caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as B
+from . import layers as L
+from .config import ATTN, LOCAL_ATTN, ModelConfig, RGLRU, RWKV
+
+Array = jax.Array
+
+
+# =============================================================================
+# Parameter construction
+# =============================================================================
+
+def _init_layer(ltype: str, cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    if ltype in (ATTN, LOCAL_ATTN):
+        p = {"attn": B.init_attn(cfg, ks[0])}
+        if cfg.cross_attention:
+            p["cross"] = B.init_attn(cfg, ks[2])
+        p["mlp"] = B.init_moe(cfg, ks[1]) if cfg.moe else \
+            B.init_mlp(cfg, ks[1])
+        return p
+    if ltype == RGLRU:
+        return {"rglru": B.init_rglru(cfg, ks[0]),
+                "mlp": B.init_mlp(cfg, ks[1])}
+    if ltype == RWKV:
+        return {"rwkv": B.init_rwkv(cfg, ks[0])}
+    raise ValueError(ltype)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    period = cfg.pattern
+    n_full = cfg.n_layers // len(period)
+    tail_types = cfg.layer_types()[n_full * len(period):]
+    keys = jax.random.split(key, 8)
+
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model),
+                                   jnp.float32) * cfg.d_model ** -0.5,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.padded_vocab),
+            jnp.float32) * cfg.d_model ** -0.5
+
+    if n_full:
+        group = {}
+        gkeys = jax.random.split(keys[2], n_full)
+        for slot, ltype in enumerate(period):
+            group[f"slot{slot}"] = jax.vmap(
+                lambda k, lt=ltype: _init_layer(lt, cfg, k))(
+                    jax.vmap(lambda k, s=slot: jax.random.fold_in(k, s))(
+                        gkeys))
+        params["groups"] = group
+    if tail_types:
+        params["tail"] = {
+            f"layer{i}": _init_layer(lt, cfg,
+                                     jax.random.fold_in(keys[3], i))
+            for i, lt in enumerate(tail_types)}
+
+    if cfg.is_encdec:
+        ekeys = jax.random.split(keys[4], 2)
+        enc_cfg = cfg  # same dims; encoder is non-causal, gelu-style MLP
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: {
+                "attn": B.init_attn(enc_cfg, jax.random.fold_in(k, 0)),
+                "mlp": B.init_mlp(enc_cfg, jax.random.fold_in(k, 1)),
+            })(jax.random.split(ekeys[0], cfg.encoder_layers)),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    if cfg.frontend == "vision":
+        # stub projection from precomputed patch embeds to d_model
+        params["img_proj"] = jax.random.normal(
+            keys[5], (cfg.d_model, cfg.d_model), jnp.float32) \
+            * cfg.d_model ** -0.5
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# =============================================================================
+# Forward
+# =============================================================================
+
+def _apply_layer(ltype: str, p: dict, x: Array, ctx: B.Ctx,
+                 cfg: ModelConfig):
+    if ltype in (ATTN, LOCAL_ATTN):
+        window = cfg.window if ltype == LOCAL_ATTN else 0
+        x, cache = B.apply_attn(p["attn"], x, ctx, cfg, window=window)
+        if cfg.cross_attention:
+            x = B.apply_cross_attn(p["cross"], x, ctx, cfg)
+        x = B.apply_moe(p["mlp"], x, cfg) if cfg.moe else \
+            B.apply_mlp(p["mlp"], x, cfg)
+        return x, cache
+    if ltype == RGLRU:
+        x, cache = B.apply_rglru(p["rglru"], x, ctx, cfg)
+        return B.apply_mlp(p["mlp"], x, cfg), cache
+    if ltype == RWKV:
+        return B.apply_rwkv(p["rwkv"], x, ctx, cfg)
+    raise ValueError(ltype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    """Decode caches, grouped exactly like the params (for the scan)."""
+    def cache_for(ltype):
+        if ltype == ATTN:
+            return B.init_attn_cache(cfg, batch, s_max)
+        if ltype == LOCAL_ATTN:
+            return B.init_attn_cache(cfg, batch, s_max, window=cfg.window)
+        if ltype == RGLRU:
+            return B.init_rglru_cache(cfg, batch)
+        if ltype == RWKV:
+            return B.init_rwkv_cache(cfg, batch)
+        raise ValueError(ltype)
+
+    period = cfg.pattern
+    n_full = cfg.n_layers // len(period)
+    tail_types = cfg.layer_types()[n_full * len(period):]
+    cache: dict = {}
+    if n_full:
+        cache["groups"] = {
+            f"slot{i}": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_full,) + a.shape).copy(),
+                cache_for(lt))
+            for i, lt in enumerate(period)}
+    if tail_types:
+        cache["tail"] = {f"layer{i}": cache_for(lt)
+                         for i, lt in enumerate(tail_types)}
+    return cache
+
+
+def _run_layers(params, x, ctx: B.Ctx, cfg: ModelConfig, caches=None):
+    """Scan the period groups, then the tail. Returns (x, new_caches)."""
+    period = cfg.pattern
+    n_full = cfg.n_layers // len(period)
+    tail_types = cfg.layer_types()[n_full * len(period):]
+    new_caches: dict = {}
+
+    def group_body(x, slice_):
+        gp, gc = slice_
+        new_gc = {}
+        for i, lt in enumerate(period):
+            sub_ctx = B.Ctx(ctx.positions, ctx.mode,
+                            None if gc is None else gc[f"slot{i}"],
+                            ctx.enc_out, ctx.enc_pos)
+            x, c = _apply_layer(lt, gp[f"slot{i}"], x, sub_ctx, cfg)
+            if c is not None:
+                new_gc[f"slot{i}"] = c
+        return x, (new_gc if new_gc else None)
+
+    if cfg.remat == "block":
+        group_body = jax.checkpoint(group_body)
+    elif cfg.remat == "block_save_coll":
+        # remat, but KEEP tensor-parallel collective outputs: the backward
+        # replay then skips re-running the all-reduces (§Perf: collective
+        # passes 3→2 at the cost of one saved (B,S,D) tensor per sublayer)
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.save_only_these_names("tp_out"))
+
+    if n_full:
+        gp = params["groups"]
+        gc = caches["groups"] if caches else None
+        if cfg.scan_layers:
+            def scan_body(x, slice_):
+                return group_body(x, slice_)
+            x, out_c = jax.lax.scan(scan_body, x, (gp, gc))
+            if out_c is not None:
+                new_caches["groups"] = out_c
+        else:
+            out_cs = []
+            for li in range(n_full):
+                sl = jax.tree.map(lambda a: a[li], (gp, gc))
+                x, c = group_body(x, sl)
+                out_cs.append(c)
+            if out_cs and out_cs[0] is not None:
+                new_caches["groups"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *out_cs)
+
+    for i, lt in enumerate(tail_types):
+        tp = params["tail"][f"layer{i}"]
+        tc = caches["tail"][f"layer{i}"] if caches else None
+        sub_ctx = B.Ctx(ctx.positions, ctx.mode, tc, ctx.enc_out,
+                        ctx.enc_pos)
+        x, c = _apply_layer(lt, tp, x, sub_ctx, cfg)
+        if c is not None:
+            new_caches.setdefault("tail", {})[f"layer{i}"] = c
+    return x, (new_caches if new_caches else None)
+
+
+def _encode(params, frames: Array, cfg: ModelConfig) -> Array:
+    """Whisper-style encoder over stub frame embeddings (non-causal)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                           x.shape[:2])
+
+    def body(x, lp):
+        ctx = B.Ctx(pos, "train")
+        h = L.rms_norm(x, lp["attn"]["ln"].astype(x.dtype), cfg.norm_eps)
+        q, k, v = B._qkv(lp["attn"], h, cfg)
+        kv_map = B.head_kv_map(cfg) if cfg.phys_heads != cfg.n_heads \
+            else None
+        # encoder seq (1500 frames) is short — naive attention is fine
+        out = L.attention(q, k, v, pos, pos, causal=False, impl="naive",
+                          kv_map=kv_map)
+        hm = B.head_mask(cfg, out.dtype)
+        if hm is not None:
+            out = out * hm[None, None, :, None]
+        x = x + jnp.einsum("bsh,hd->bsd", out.reshape(*x.shape[:2], -1),
+                           lp["attn"]["wo"].astype(x.dtype))
+        x = B.apply_mlp(lp["mlp"], x, cfg)
+        del ctx
+        return x, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    else:
+        for li in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[li],
+                                        params["encoder"]["layers"]))
+    return L.rms_norm(x, params["encoder"]["final_norm"].astype(x.dtype),
+                      cfg.norm_eps)
+
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig, mode: str):
+    """Token embedding + modality prefixes. Returns (x, positions,
+    enc_out, enc_pos, label_offset)."""
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * (cfg.d_model ** 0.5)
+    offset = 0
+    enc_out = enc_pos = None
+    if cfg.frontend == "vision" and "img_embeds" in batch:
+        img = jnp.einsum("bnd,de->bne", batch["img_embeds"].astype(dt),
+                         params["img_proj"].astype(dt))
+        x = jnp.concatenate([img, x], axis=1)
+        offset = img.shape[1]
+    if cfg.is_encdec and "frames" in batch:
+        enc_out = _encode(params, batch["frames"], cfg)
+    elif cfg.is_encdec and "enc_out" in batch:
+        enc_out = batch["enc_out"].astype(dt)   # decode: encoder ran once
+    if enc_out is not None:
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32),
+            enc_out.shape[:2])
+    if "positions" in batch:
+        positions = batch["positions"]
+        if offset:
+            positions = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(offset, dtype=jnp.int32),
+                                  (x.shape[0], offset)),
+                 positions + offset], axis=1)
+    else:
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+    return x, positions, enc_out, enc_pos, offset
+
+
+def forward(params, batch: dict, cfg: ModelConfig, mode: str = "train",
+            caches=None):
+    """Returns (logits or hidden, new_caches)."""
+    x, positions, enc_out, enc_pos, offset = _embed_inputs(
+        params, batch, cfg, mode)
+    ctx = B.Ctx(positions, mode, None, enc_out, enc_pos)
+    x, new_caches = _run_layers(params, x, ctx, cfg, caches)
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    if offset:  # drop modality prefix before the LM head
+        x = x[:, offset:]
+    return x, new_caches
+
+
+def _head_matrix(params, cfg):
+    return (params["embed"].T if cfg.tie_embeddings else params["head"])
+
+
+def logits_from_hidden(params, x, cfg):
+    w = _head_matrix(params, cfg).astype(x.dtype)
+    out = jnp.einsum("bsd,dv->bsv", x, w,
+                     preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.padded_vocab != cfg.vocab:   # mask vocab-padding columns
+        pad_mask = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e9)
+        out = out + pad_mask
+    return out
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig) -> Array:
+    """Next-token cross-entropy (labels = batch['labels'])."""
+    x, _ = forward(params, batch, cfg, mode="train")
+    labels = batch["labels"]
+    if cfg.loss_chunk:
+        w = _head_matrix(params, cfg).astype(x.dtype)
+        return L.chunked_cross_entropy(x, w, labels, cfg.loss_chunk,
+                                       valid_vocab=cfg.vocab)
+    logits = logits_from_hidden(params, x, cfg)
+    return L.cross_entropy(logits, labels)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, s_max: int):
+    """Run the prompt, build decode caches. Returns (last_logits, caches)."""
+    caches = init_cache(cfg, batch["tokens"].shape[0], s_max)
+    x, new_caches = forward(params, batch, cfg, mode="prefill",
+                            caches=caches)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)
+    return logits, new_caches
+
+
+def decode_step(params, caches, batch: dict, cfg: ModelConfig):
+    """One decode step: batch['tokens'] is (B, 1); returns (logits, caches)."""
+    x, new_caches = forward(params, batch, cfg, mode="decode",
+                            caches=caches)
+    return logits_from_hidden(params, x, cfg), new_caches

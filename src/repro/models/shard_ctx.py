@@ -1,0 +1,93 @@
+"""Activation-sharding context: model code asks, trainer provides.
+
+Model code is mesh-agnostic; the trainer/dry-run installs an
+``activation_sharding(mesh)`` context and layers call
+``constrain(x, ...)`` with *logical* axes:
+
+* ``"batch"`` → all data-parallel mesh axes (pod, data),
+* ``"model"`` → the tensor-parallel axis (dropped automatically if the
+  dim isn't divisible by the axis size, e.g. kv=8 heads on model=16),
+* ``None``    → replicated.
+
+Without an installed context, constrain() is a no-op, so single-device
+smoke tests and pure-CPU runs are untouched.  These constraints pin the
+head/hidden axes of attention and MLP intermediates to the model axis —
+without them XLA's sharding propagation loses the head sharding through
+the scan+checkpoint boundary and replicates O(S·S) attention buffers
+per device (measured: 151 GiB/device → see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Optional[Mesh], profile: str = "2d"):
+    prev = (getattr(_TLS, "mesh", None), getattr(_TLS, "profile", "2d"))
+    _TLS.mesh = mesh
+    _TLS.profile = profile
+    try:
+        yield
+    finally:
+        _TLS.mesh, _TLS.profile = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_TLS, "mesh", None)
+
+
+def current_profile() -> str:
+    return getattr(_TLS, "profile", "2d")
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """(B, S, H, Dh): shard H over model if divisible, else shard Dh —
+    replicated heads cost tp× attention flops (measured, calibrate.py)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    tp = mesh.shape.get("model", 1)
+    h, dh = x.shape[-2], x.shape[-1]
+    if h % tp == 0:
+        return constrain(x, "batch", None, "model", None)
+    if dh % tp == 0:
+        return constrain(x, "batch", None, None, "model")
+    return constrain(x, "batch", None, None, None)
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """Apply a logical sharding constraint if a mesh context is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    profile = current_profile()
+    if profile == "zero3":
+        batch_axes = tuple(mesh.axis_names)
+        logical = tuple(None if ax == "model" else ax for ax in logical)
+    else:
+        batch_axes = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+    if len(batch_axes) == 1:
+        batch_axes = batch_axes[0]
+    spec = []
+    for dim, ax in zip(x.shape, logical):
+        if ax == "batch":
+            n = 1
+            for a in (batch_axes if isinstance(batch_axes, tuple)
+                      else (batch_axes,)):
+                n *= mesh.shape[a]
+            spec.append(batch_axes if dim % n == 0 else None)
+        elif ax == "model":
+            tp = mesh.shape.get("model", 1)
+            spec.append("model" if dim % tp == 0 else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

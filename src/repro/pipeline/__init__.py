@@ -1,0 +1,13 @@
+"""repro.pipeline — the paper's six-stage PCAP → database pipeline."""
+from .driver import PipelineConfig, build_tasks, run_pipeline
+from .pcap import TrafficConfig, botnet_truth, read_pcap, synth_packets, \
+    write_pcap
+from .runner import FaultInjector, Journal, Runner, Task, WorkerKilled
+from . import stages
+
+__all__ = [
+    "PipelineConfig", "build_tasks", "run_pipeline",
+    "TrafficConfig", "synth_packets", "write_pcap", "read_pcap",
+    "botnet_truth", "Runner", "Task", "Journal", "FaultInjector",
+    "WorkerKilled", "stages",
+]

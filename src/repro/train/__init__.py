@@ -1,0 +1,12 @@
+from . import sharding
+from .compression import compressed_pod_mean
+from .optimizer import OptConfig, adamw_init, adamw_update
+from .trainer import (abstract_train_state, init_train_state,
+                      make_decode_step, make_loss_fn, make_prefill_step,
+                      make_train_step)
+
+__all__ = [
+    "sharding", "compressed_pod_mean", "OptConfig", "adamw_init", "adamw_update",
+    "make_train_step", "make_loss_fn", "make_prefill_step",
+    "make_decode_step", "init_train_state", "abstract_train_state",
+]

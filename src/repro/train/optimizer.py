@@ -1,0 +1,80 @@
+"""AdamW (sharded) + distributed-optimization knobs.
+
+States inherit the parameters' FSDP sharding automatically (same tree
+structure ⇒ same PartitionSpecs).  Two collective-term optimizations are
+first-class and measured in EXPERIMENTS.md §Perf:
+
+* ``grad_dtype="bfloat16"`` — casts gradients before the (XLA-inserted)
+  cross-replica reduction: halves all-reduce bytes on the wire.
+* ``grad_accum`` — micro-batching: k sequential grad evaluations per
+  update amortize the parameter all-gather/grad-reduce over k× compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    grad_dtype: Optional[str] = None     # "bfloat16" halves reduce bytes
+    gather_dtype: Optional[str] = None   # "bfloat16" halves FSDP gathers
+    grad_accum: int = 1
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(step.astype(jnp.float32) /
+                       jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = _schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p)
+        return p, m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,110 @@
+"""train_step / serve-step factories with sharding constraints.
+
+``make_train_step`` builds the jit-able update: loss → grad →
+(optional bf16 grad cast, the §Perf collective optimization) → AdamW.
+Gradient accumulation runs micro-batches under ``lax.scan`` so the
+lowered HLO contains one fused update per optimizer step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import ModelConfig
+from . import sharding as S
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None, opt: Optional[OptConfig] = None,
+                 profile: str = "2d"):
+    from ..models.shard_ctx import activation_sharding
+
+    def loss_fn(params, batch):
+        if opt is not None and opt.gather_dtype:
+            # cast the f32 master shards BEFORE use: the FSDP all-gather
+            # then moves bf16 — halves gather wire bytes (§Perf)
+            gd = jnp.dtype(opt.gather_dtype)
+            params = jax.tree.map(
+                lambda p: p.astype(gd) if p.dtype == jnp.float32 else p,
+                params)
+        if mesh is not None:
+            ba = S.batch_axes(mesh, profile)
+            batch = {k: jax.lax.with_sharding_constraint(
+                v, NamedSharding(mesh, P(ba, *(None,) * (v.ndim - 1))))
+                for k, v in batch.items()}
+        with activation_sharding(mesh, profile):
+            return M.loss_fn(params, batch, cfg)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig, mesh=None,
+                    profile: str = "2d"):
+    loss_fn = make_loss_fn(cfg, mesh, opt, profile)
+
+    def train_step(params, opt_state, batch):
+        if opt.grad_accum > 1:
+            # micro-batch over the leading batch axis
+            def micro(carry, mb):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_sum + l,
+                        jax.tree.map(jnp.add, gsum, g)), None
+
+            def split(x):
+                b = x.shape[0]
+                k = opt.grad_accum
+                return x.reshape(k, b // k, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros(()), zeros), mbs)
+            loss = loss / opt.grad_accum
+            grads = jax.tree.map(lambda g: g / opt.grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if opt.grad_dtype:
+            # cast before the cross-replica reduction — halves the wire
+            # bytes of the gradient all-reduce (§Perf)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.dtype(opt.grad_dtype)), grads)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int, mesh=None):
+    from ..models.shard_ctx import activation_sharding
+
+    def prefill_step(params, batch):
+        with activation_sharding(mesh):
+            return M.prefill(params, batch, cfg, s_max=s_max)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    from ..models.shard_ctx import activation_sharding
+
+    def decode_step(params, caches, batch):
+        with activation_sharding(mesh):
+            return M.decode_step(params, caches, batch, cfg)
+    return decode_step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = M.init_params(cfg, key)
+    return params, adamw_init(params)
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """ShapeDtypeStruct (params, opt_state) — dry-run path, no allocation."""
+    params = M.abstract_params(cfg)
+    opt_state = jax.eval_shape(adamw_init, params)
+    return params, opt_state

@@ -1,0 +1,185 @@
+"""Associative-array algebra: unit + property tests (paper §II-B)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Assoc, KeyRange, StartsWith
+from repro.core.schema import col2val, parse_tsv, to_tsv, val2col
+
+
+def A(r, c, v, **kw):
+    return Assoc(r, c, v, **kw)
+
+
+class TestConstruction:
+    def test_triple_dedupe_sums(self):
+        a = A("r1,r2,r1,", "c1,c2,c1,", [1.0, 2.0, 3.0])
+        assert a.nnz == 2
+        r, c, v = a.triples()
+        assert v[list(r).index("r1")] == 4.0
+
+    def test_categorical_min_collision(self):
+        a = A("r,r,", "c,c,", "beta,alpha,")
+        assert a.nnz == 1
+        assert a.triples()[2][0] == "alpha"
+
+    def test_broadcast_scalar_value(self):
+        a = A("r1,r2,", "c1,c2,", 1.0)
+        assert a.nnz == 2
+
+    def test_empty(self):
+        a = Assoc()
+        assert a.nnz == 0 and a.shape == (0, 0)
+
+    def test_delimited_string_keys(self):
+        a = A("a,b,c,", "x,y,z,", [1, 2, 3])
+        assert list(a.row) == ["a", "b", "c"]
+
+
+class TestSelection:
+    def setup_method(self):
+        self.a = A("r1,r1,r2,r3,", "ip.src|1.1.1.1,ip.dst|2.2.2.2,"
+                   "ip.src|3.3.3.3,tcp.dstport|80,", [1, 2, 3, 4])
+
+    def test_startswith(self):
+        sub = self.a[:, StartsWith("ip.src|")]
+        assert sub.shape[1] == 2
+
+    def test_keyrange(self):
+        sub = self.a[KeyRange("r1", "r2"), :]
+        assert set(sub.row) == {"r1", "r2"}
+
+    def test_exact_keys(self):
+        sub = self.a[["r1"], :]
+        assert list(sub.row) == ["r1"] and sub.nnz == 2
+
+    def test_missing_key_empty(self):
+        sub = self.a[["zzz"], :]
+        assert sub.nnz == 0
+
+
+class TestAlgebra:
+    def test_add_union(self):
+        x = A("a,b,", "c,c,", [1.0, 2.0])
+        y = A("b,z,", "c,c,", [10.0, 5.0])
+        s = x + y
+        r, c, v = s.triples()
+        d = dict(zip(r, v))
+        assert d["a"] == 1.0 and d["b"] == 12.0 and d["z"] == 5.0
+
+    def test_matmul_key_aligned(self):
+        # A: packets × src, B: packets × dst ⇒ A.T * B: src × dst
+        e = A("p1,p1,p2,p2,", "src|s1,dst|d1,src|s1,dst|d2,", 1.0)
+        adj = e[:, StartsWith("src|")].T * e[:, StartsWith("dst|")]
+        r, c, v = adj.triples()
+        assert adj.shape == (1, 2) and v.sum() == 2.0
+
+    def test_matmul_matches_scipy(self):
+        rng = np.random.default_rng(0)
+        r = rng.integers(0, 8, 30).astype(str)
+        c = rng.integers(0, 8, 30).astype(str)
+        v = rng.integers(1, 5, 30).astype(float)
+        x = Assoc(r, c, v)
+        got = (x.T * x).triples()[2]
+        sp = x._numeric_sm()
+        exp = (sp.T @ sp).tocoo()
+        assert np.isclose(sorted(got), sorted(exp.data[exp.data != 0])).all()
+
+    def test_elementwise_multiply(self):
+        x = A("a,b,", "c,c,", [2.0, 3.0])
+        y = A("a,z,", "c,c,", [10.0, 5.0])
+        m = x.multiply(y)
+        assert m.nnz == 1 and m.triples()[2][0] == 20.0
+
+    def test_transpose_involution(self):
+        x = A("a,b,", "c,d,", [1.0, 2.0])
+        assert (x.T.T == x)
+
+    def test_sum_axes(self):
+        x = A("a,a,b,", "c,d,c,", [1.0, 2.0, 3.0])
+        rs = x.sum(1)
+        assert dict(zip(rs.triples()[0], rs.triples()[2])) == \
+            {"a": 3.0, "b": 3.0}
+        cs = x.sum(0)
+        assert dict(zip(cs.triples()[1], cs.triples()[2])) == \
+            {"c": 4.0, "d": 2.0}
+
+    def test_paper_degree_idiom(self):
+        e = A("p1,p1,p2,", "src|a,dst|b,src|a,", 1.0)
+        deg = e.T.sum(1).putcol("degree,")
+        d = dict(zip(deg.triples()[0], deg.triples()[2]))
+        assert d["src|a"] == 2.0 and list(deg.col) == ["degree"]
+
+    def test_putval_logical(self):
+        x = A("a,b,", "c,d,", [5.0, 7.0])
+        ones = x.putval("1,")
+        assert set(ones.triples()[2]) == {"1"}
+        logical = x.logical()
+        assert set(logical.triples()[2]) == {1.0}
+
+    def test_filters(self):
+        x = A("a,b,c,", "z,z,z,", [1.0, 5.0, 9.0])
+        assert (x > 4.0).nnz == 2
+        assert (x <= 1.0).nnz == 1
+
+    def test_num2str_roundtrip(self):
+        x = A("a,b,", "z,z,", [1.0, 5.0])
+        y = x.num2str().str2num()
+        assert (y == x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 6),
+                          st.integers(1, 9)), min_size=1, max_size=40))
+def test_property_add_commutes(triples):
+    r = np.asarray([f"r{t[0]}" for t in triples])
+    c = np.asarray([f"c{t[1]}" for t in triples])
+    v = np.asarray([float(t[2]) for t in triples])
+    half = len(triples) // 2 or 1
+    a = Assoc(r[:half], c[:half], v[:half])
+    b = Assoc(r[half:], c[half:], v[half:]) if len(triples) > half \
+        else Assoc()
+    assert ((a + b) == (b + a))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(1, 9)), min_size=1, max_size=30))
+def test_property_transpose_matmul(triples):
+    """(A'·A)' == A'·A (gram matrix symmetric)."""
+    r = np.asarray([f"r{t[0]}" for t in triples])
+    c = np.asarray([f"c{t[1]}" for t in triples])
+    v = np.asarray([float(t[2]) for t in triples])
+    a = Assoc(r, c, v)
+    g = a.sqin()
+    assert (g == g.T)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3),
+                          st.integers(0, 4)), min_size=1, max_size=30))
+def test_property_schema_roundtrip(triples):
+    """col2val(val2col(A)) recovers the dense table."""
+    r = np.asarray([f"p{t[0]}" for t in triples])
+    c = np.asarray([f"f{t[1]}" for t in triples])
+    v = np.asarray([f"v{t[2]}" for t in triples])
+    dense = Assoc(r, c, v)
+    back = col2val(val2col(dense, "|"), "|")
+    assert (back == dense)
+
+
+def test_tsv_roundtrip():
+    tsv = ("id\tip.src\tip.dst\np1\t1.1.1.1\t2.2.2.2\n"
+           "p2\t3.3.3.3\t4.4.4.4\n")
+    a = parse_tsv(tsv)
+    assert parse_tsv(to_tsv(a)) == a
+
+
+def test_save_load_roundtrip(tmp_path):
+    x = A("a,b,", "c,d,", [1.0, 2.0])
+    p = str(tmp_path / "x.npz")
+    x.save(p)
+    assert (Assoc.load(p) == x)
+    y = A("a,b,", "c,d,", "u,w,")
+    y.save(p)
+    assert (Assoc.load(p) == y)

@@ -1,0 +1,137 @@
+"""Checkpoint manager: atomicity, restart, async, resharding."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as C
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(0, 1, (8, 4)).astype(np.float32)),
+            "b": {"c": jnp.arange(10, dtype=jnp.int32),
+                  "d": jnp.asarray(2.5)}}
+
+
+class TestSaveRestore:
+    def test_roundtrip(self, tmp_path):
+        t = tree()
+        C.save(str(tmp_path), 3, t, {"step": 3, "note": "x"})
+        back, meta = C.restore(str(tmp_path), t)
+        assert meta["note"] == "x"
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_step(self, tmp_path):
+        assert C.latest_step(str(tmp_path)) is None
+        C.save(str(tmp_path), 1, tree())
+        C.save(str(tmp_path), 5, tree())
+        assert C.latest_step(str(tmp_path)) == 5
+
+    def test_uncommitted_ignored(self, tmp_path):
+        C.save(str(tmp_path), 1, tree())
+        d = os.path.join(str(tmp_path), "step_00000009")
+        os.makedirs(d)                       # no COMMITTED marker
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            f.write("{}")
+        assert C.latest_step(str(tmp_path)) == 1
+
+    def test_crash_mid_save_keeps_previous(self, tmp_path):
+        C.save(str(tmp_path), 1, tree(1))
+        # simulate crash: a .tmp dir left behind
+        os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+        back, _ = C.restore(str(tmp_path), tree())
+        assert C.latest_step(str(tmp_path)) == 1
+
+    def test_multi_shard(self, tmp_path):
+        big = {"x": jnp.ones((1000, 100)), "y": jnp.ones((1000, 100))}
+        C.save(str(tmp_path), 0, big, shard_size=200_000)
+        files = os.listdir(os.path.join(str(tmp_path), "step_00000000"))
+        assert sum(f.startswith("shard_") for f in files) > 1
+        back, _ = C.restore(str(tmp_path), big)
+        np.testing.assert_array_equal(np.asarray(back["x"]),
+                                      np.ones((1000, 100)))
+
+
+class TestAsync:
+    def test_async_save_and_gc(self, tmp_path):
+        saver = C.AsyncCheckpointer(str(tmp_path), keep=2)
+        for step in range(5):
+            saver.save_async(step, tree(step), {"step": step})
+        saver.wait()
+        steps = sorted(int(n.split("_")[1])
+                       for n in os.listdir(str(tmp_path))
+                       if n.startswith("step_"))
+        assert steps == [3, 4]
+
+    def test_async_error_surfaces(self, tmp_path):
+        blocker = tmp_path / "file"
+        blocker.write_text("x")               # a FILE where a dir must go
+        saver = C.AsyncCheckpointer(str(blocker / "sub"))
+        saver.save_async(0, tree())
+        with pytest.raises(BaseException):
+            saver.wait()
+
+
+class TestTrainingResume:
+    def test_sampler_and_optstate_roundtrip(self, tmp_path):
+        from repro.data import SamplerState
+        from repro.train import OptConfig, adamw_init, adamw_update
+        params = tree()
+        opt = adamw_init(params)
+        grads = jax.tree.map(jnp.ones_like, params)
+        params2, opt2, _ = adamw_update(params, grads, opt, OptConfig())
+        sampler = SamplerState(file_index=3, offset=17, epoch=1)
+        C.save(str(tmp_path), 7, (params2, opt2, sampler.to_dict()),
+               {"step": 7})
+        (p, o, s), meta = C.restore(str(tmp_path),
+                                    (params2, opt2, sampler.to_dict()))
+        assert int(np.asarray(o["step"])) == 1
+        assert int(np.asarray(s["file_index"])) == 3
+        assert meta["step"] == 7
+
+
+class TestElasticRemesh:
+    def test_restore_onto_different_mesh(self, tmp_path):
+        """Elastic restart: a checkpoint written under one mesh topology
+        restores (re-shards) onto a different one — subprocess so this
+        process keeps its 1-device view."""
+        import subprocess
+        import sys
+        import textwrap
+        code = textwrap.dedent(f"""
+            import os
+            os.environ["XLA_FLAGS"] = \
+                "--xla_force_host_platform_device_count=8"
+            import jax, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro import checkpoint as C
+
+            tree = {{"w": jax.numpy.arange(64, dtype=jax.numpy.float32)
+                    .reshape(8, 8)}}
+            mesh1 = jax.make_mesh((2, 4), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            sh1 = {{"w": NamedSharding(mesh1, P("data", "model"))}}
+            placed = jax.device_put(tree, sh1)
+            C.save(r"{tmp_path}", 0, placed)
+
+            mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
+            back, _ = C.restore(r"{tmp_path}", tree, shardings=sh2)
+            assert back["w"].sharding == sh2["w"]
+            np.testing.assert_array_equal(np.asarray(back["w"]),
+                                          np.asarray(tree["w"]))
+            print("REMESH_OK")
+        """)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "src"))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "REMESH_OK" in out.stdout

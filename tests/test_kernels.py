@@ -1,0 +1,232 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.segsum import segsum
+from repro.kernels.spmv import csr_to_ell, spmv_ell
+from repro.kernels.wkv6 import wkv6
+
+
+def key(i=0):
+    return jax.random.key(i)
+
+
+class TestSegsum:
+    @pytest.mark.parametrize("nnz,nseg,block_nnz,block_seg", [
+        (100, 17, 32, 8),
+        (1000, 300, 256, 128),
+        (5000, 64, 1024, 64),
+        (7, 3, 1024, 1024),       # smaller than one block
+    ])
+    def test_matches_ref(self, nnz, nseg, block_nnz, block_seg):
+        ids = jnp.sort(jax.random.randint(key(1), (nnz,), 0, nseg))
+        vals = jax.random.normal(key(2), (nnz,))
+        out = segsum(ids, vals, nseg, block_nnz=block_nnz,
+                     block_seg=block_seg)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.segsum_ref(ids, vals,
+                                                             nseg)),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_unsorted_ids_ok(self):
+        ids = jax.random.randint(key(3), (512,), 0, 40)
+        vals = jnp.ones((512,))
+        out = segsum(ids, vals, 40, block_nnz=128, block_seg=16)
+        np.testing.assert_allclose(np.asarray(out).sum(), 512.0)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        ids = jnp.sort(jax.random.randint(key(4), (256,), 0, 31))
+        vals = jax.random.normal(key(5), (256,)).astype(dtype)
+        out = segsum(ids, vals, 31, block_nnz=64, block_seg=32)
+        exp = ref.segsum_ref(ids, vals, 31)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestSpmvEll:
+    @pytest.mark.parametrize("R,C,K,br,bc", [
+        (64, 256, 4, 32, 64),
+        (100, 500, 6, 32, 128),
+        (13, 40, 2, 8, 16),
+    ])
+    def test_plus_times(self, R, C, K, br, bc):
+        rng = np.random.default_rng(R)
+        ecols = jnp.asarray(rng.integers(-1, C, (R, K)), jnp.int32)
+        evals = jnp.asarray(rng.normal(0, 1, (R, K)).astype(np.float32))
+        evals = jnp.where(ecols >= 0, evals, 0.0)
+        x = jnp.asarray(rng.normal(0, 1, C).astype(np.float32))
+        out = spmv_ell(ecols, evals, x, block_rows=br, block_cols=bc)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.spmv_ell_ref(ecols, evals, x)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_csr_to_ell_pack(self):
+        row_ptr = np.asarray([0, 2, 2, 5])
+        cols = np.asarray([1, 3, 0, 2, 4])
+        vals = np.asarray([1., 2., 3., 4., 5.])
+        ecols, evals = csr_to_ell(row_ptr, cols, vals, 3, k_max=3)
+        assert ecols.shape == (3, 3)
+        np.testing.assert_allclose(np.asarray(evals[1]), 0.0)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,KV,Dh,bq,bk", [
+        (128, 4, 4, 32, 32, 32),
+        (128, 4, 2, 32, 64, 32),     # GQA
+        (256, 8, 1, 64, 64, 64),     # MQA
+    ])
+    @pytest.mark.parametrize("causal,window", [
+        (True, 0), (True, 48), (False, 0)])
+    def test_matches_naive(self, S, H, KV, Dh, bq, bk, causal, window):
+        B = 2
+        q = jax.random.normal(key(1), (B, S, H, Dh))
+        k = jax.random.normal(key(2), (B, S, KV, Dh))
+        v = jax.random.normal(key(3), (B, S, KV, Dh))
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk)
+        exp = ref.flash_attention_ref(q, k, v, causal, window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        B, S, H, Dh = 1, 64, 2, 32
+        q = jax.random.normal(key(1), (B, S, H, Dh), jnp.bfloat16)
+        k = jax.random.normal(key(2), (B, S, H, Dh), jnp.bfloat16)
+        v = jax.random.normal(key(3), (B, S, H, Dh), jnp.bfloat16)
+        out = flash_attention(q, k, v, block_q=32, block_k=32)
+        exp = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(exp, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("S,C,bt,bc", [
+        (64, 128, 16, 64),
+        (128, 256, 64, 128),
+        (32, 64, 32, 64),
+    ])
+    def test_matches_scan(self, S, C, bt, bc):
+        B = 2
+        a = jax.nn.sigmoid(jax.random.normal(key(1), (B, S, C)))
+        b = jax.random.normal(key(2), (B, S, C)) * 0.1
+        out = rglru_scan(a, b, block_t=bt, block_c=bc)
+        exp = ref.rglru_scan_ref(a, b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("S,H,Dh,chunk", [
+        (64, 2, 16, 16),
+        (128, 4, 32, 32),
+        (96, 1, 8, 32),
+    ])
+    def test_matches_scan(self, S, H, Dh, chunk):
+        B = 2
+        r = jax.random.normal(key(1), (B, S, H, Dh))
+        k = jax.random.normal(key(2), (B, S, H, Dh))
+        v = jax.random.normal(key(3), (B, S, H, Dh))
+        w = jax.nn.sigmoid(jax.random.normal(key(4), (B, S, H, Dh))) \
+            * 0.5 + 0.45
+        u = jax.random.normal(key(5), (H, Dh)) * 0.1
+        out = wkv6(r, k, v, w, u, chunk=chunk)
+        exp = ref.wkv6_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestModelIntegration:
+    """Kernels wired into the model forward paths (inference side)."""
+
+    def test_pallas_attention_in_model(self):
+        import dataclasses
+        from repro.configs import smoke_config
+        from repro.models import init_params, prefill
+        from repro.models.config import ShapeConfig
+        cfg0 = smoke_config("phi3-mini-3.8b")
+        cfgP = dataclasses.replace(cfg0, attention_impl="pallas",
+                                   attention_chunk=16)
+        params = init_params(cfg0, jax.random.key(0))
+        shape = ShapeConfig("p", 32, 2, "prefill")
+        from repro.models import inputs as I
+        batch = I.make_batch(cfg0, shape)
+        l0, _ = prefill(params, batch, cfg0, s_max=36)
+        lP, _ = prefill(params, batch, cfgP, s_max=36)
+        np.testing.assert_allclose(np.asarray(l0, np.float32),
+                                   np.asarray(lP, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_pallas_rglru_in_model(self):
+        import dataclasses
+        from repro.configs import smoke_config
+        from repro.models import init_params, prefill
+        from repro.models.config import ShapeConfig
+        from repro.models import inputs as I
+        cfg0 = smoke_config("recurrentgemma-9b")
+        cfgP = dataclasses.replace(cfg0, rglru_impl="pallas")
+        params = init_params(cfg0, jax.random.key(0))
+        shape = ShapeConfig("p", 32, 2, "prefill")
+        batch = I.make_batch(cfg0, shape)
+        l0, c0 = prefill(params, batch, cfg0, s_max=36)
+        lP, cP = prefill(params, batch, cfgP, s_max=36)
+        np.testing.assert_allclose(np.asarray(l0, np.float32),
+                                   np.asarray(lP, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        # recurrent states carried to decode must match too
+        h0 = jax.tree.leaves(c0)[0]
+        hP = jax.tree.leaves(cP)[0]
+        assert h0.shape == hP.shape
+
+
+class TestSegsumWindowed:
+    """§Perf kernel iteration: O(nnz·2·Bseg) windowed segsum."""
+
+    @pytest.mark.parametrize("nnz,nseg,bn,bs", [
+        (5000, 300, 512, 512),
+        (20000, 5000, 1024, 1024),
+        (500, 64, 256, 256),
+        (777, 100, 128, 256),        # ragged nnz
+    ])
+    def test_matches_ref(self, nnz, nseg, bn, bs):
+        from repro.kernels.segsum import segsum_windowed
+        ids = jnp.sort(jax.random.randint(key(nnz), (nnz,), 0, nseg))
+        vals = jax.random.normal(key(nnz + 1), (nnz,))
+        out = segsum_windowed(ids, vals, nseg, block_nnz=bn, block_seg=bs)
+        exp = ref.segsum_ref(ids, vals, nseg)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_sparse_coverage_spill_exact(self):
+        """Blocks spanning ≫ 2 tiles exercise the spill correction."""
+        from repro.kernels.segsum import segsum_windowed
+        ids = jnp.sort(jax.random.randint(key(9), (2048,), 0, 1_000_000))
+        vals = jnp.ones((2048,))
+        out = segsum_windowed(ids, vals, 1_000_000,
+                              block_nnz=256, block_seg=256)
+        exp = ref.segsum_ref(ids, vals, 1_000_000)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-3)
+
+    def test_pallas_wkv6_in_model(self):
+        import dataclasses
+        from repro.configs import smoke_config
+        from repro.models import init_params, prefill
+        from repro.models.config import ShapeConfig
+        from repro.models import inputs as I
+        cfg0 = smoke_config("rwkv6-1.6b")
+        cfgP = dataclasses.replace(cfg0, rwkv_impl="pallas")
+        params = init_params(cfg0, jax.random.key(0))
+        shape = ShapeConfig("p", 32, 2, "prefill")
+        batch = I.make_batch(cfg0, shape)
+        l0, _ = prefill(params, batch, cfg0, s_max=36)
+        lP, _ = prefill(params, batch, cfgP, s_max=36)
+        np.testing.assert_allclose(np.asarray(l0, np.float32),
+                                   np.asarray(lP, np.float32),
+                                   rtol=2e-2, atol=2e-2)

@@ -1,0 +1,213 @@
+"""Model zoo: per-arch smoke tests + numerical equivalences.
+
+Per assignment: every architecture gets a REDUCED same-family config
+smoke test — one forward/train step on CPU asserting output shapes and
+no NaNs — plus decode-vs-teacher-forcing consistency (cache correctness)
+and impl-equivalence checks (chunked vs naive attention, wkv forms).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import (ShapeConfig, decode_step, init_params, inputs,
+                          loss_fn, prefill)
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import model as M
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", 32, 2, "train")
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", 32, 2, "prefill")
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = smoke_config(arch)
+            cache[arch] = (cfg, init_params(cfg, jax.random.key(0)))
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_train_step_finite(self, arch, arch_state):
+        cfg, params = arch_state(arch)
+        batch = inputs.make_batch(cfg, SMOKE_TRAIN)
+        loss = loss_fn(params, batch, cfg)
+        assert jnp.isfinite(loss), (arch, loss)
+        grads = jax.grad(lambda p: loss_fn(p, batch, cfg))(params)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                          for g in jax.tree.leaves(grads)))
+        assert jnp.isfinite(gn), arch
+
+    def test_forward_shapes(self, arch, arch_state):
+        cfg, params = arch_state(arch)
+        batch = inputs.make_batch(cfg, SMOKE_TRAIN)
+        x, _ = M.forward(params, batch, cfg, mode="train")
+        assert x.shape == (2, SMOKE_TRAIN.seq_len, cfg.d_model)
+        logits = M.logits_from_hidden(params, x, cfg)
+        assert logits.shape[-1] == cfg.padded_vocab
+        assert jnp.isfinite(logits).all()
+
+    def test_decode_matches_teacher_forcing(self, arch, arch_state):
+        """prefill(S) then decode(token S) must equal forward(S+1)."""
+        cfg, params = arch_state(arch)
+        S = SMOKE_PREFILL.seq_len
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, S + 1)), jnp.int32)
+        pb = {"tokens": toks[:, :S]}
+        fb = {"tokens": toks}
+        if cfg.frontend == "vision":
+            img = jnp.asarray(rng.normal(0, 1, (2, cfg.n_img_tokens,
+                                                 cfg.d_model)), jnp.float32)
+            pb["img_embeds"] = img
+            fb["img_embeds"] = img
+        if cfg.is_encdec:
+            frames = jnp.asarray(rng.normal(0, 1, (2, cfg.encoder_seq,
+                                                   cfg.d_model)),
+                                 jnp.float32)
+            pb["frames"] = frames
+            fb["frames"] = frames
+        # full forward logits at position S (predicting token S+1)
+        x, _ = M.forward(params, fb, cfg, mode="train")
+        full_logits = M.logits_from_hidden(params, x[:, S:S + 1], cfg)
+        # prefill + one decode step (vision: positions continue after
+        # the image prefix the prefill consumed)
+        offset = cfg.n_img_tokens if cfg.frontend == "vision" else 0
+        _, caches = prefill(params, pb, cfg, s_max=S + offset + 4)
+        db = {"tokens": toks[:, S:S + 1],
+              "positions": jnp.full((2, 1), S + offset, jnp.int32)}
+        if cfg.is_encdec:
+            db["enc_out"] = M._encode(params, frames, cfg)
+        dec_logits, _ = decode_step(params, caches, db, cfg)
+        np.testing.assert_allclose(
+            np.asarray(dec_logits, np.float32),
+            np.asarray(full_logits, np.float32), rtol=2e-2, atol=2e-2)
+
+
+class TestEquivalences:
+    def test_chunked_attention_matches_naive(self):
+        key = jax.random.key(0)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, 64, 4, 16))
+        k = jax.random.normal(ks[1], (2, 64, 2, 16))
+        v = jax.random.normal(ks[2], (2, 64, 2, 16))
+        pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+        for window in (0, 24):
+            ref = L.attention_naive(q, k, v, pos, pos, True, window)
+            for tri in (False, True):
+                out = L.attention_chunked(q, k, v, pos, pos, True, window,
+                                          chunk=16, triangular=tri)
+                np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                           rtol=1e-4, atol=1e-5)
+
+    def test_wkv_chunked_matches_scan(self):
+        ks = jax.random.split(jax.random.key(1), 5)
+        Bn, S, H, Dh = 2, 64, 2, 16
+        r, k, v = (jax.random.normal(ks[i], (Bn, S, H, Dh))
+                   for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (Bn, S, H, Dh))) \
+            * 0.5 + 0.45
+        u = jax.random.normal(ks[4], (H, Dh)) * 0.1
+        s0 = jnp.zeros((Bn, H, Dh, Dh))
+        o1, st1 = B.wkv_scan(r, k, v, w, u, s0)
+        o2, st2 = B.wkv_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_head_padding_exact(self):
+        """Padded-head model computes exactly the logical model."""
+        cfg0 = smoke_config("whisper-large-v3")
+        cfgP = dataclasses.replace(cfg0, head_pad=8, kv_pad=8)
+        p0 = init_params(cfg0, jax.random.key(0))
+        pP = init_params(cfgP, jax.random.key(0))
+
+        def graft(a, b):
+            out = {}
+            for key in b:
+                if isinstance(b[key], dict):
+                    out[key] = graft(a[key], b[key])
+                elif key in ("wq", "wk", "wv", "bq", "bk", "bv"):
+                    n = a[key].shape[-1]
+                    out[key] = jnp.zeros_like(b[key]).at[..., :n].set(a[key])
+                elif key == "wo":
+                    n = a[key].shape[-2]
+                    out[key] = jnp.zeros_like(b[key]) \
+                        .at[..., :n, :].set(a[key])
+                else:
+                    out[key] = a[key]
+            return out
+
+        pP = graft(p0, pP)
+        batch = inputs.make_batch(cfg0, SMOKE_TRAIN)
+        l0 = loss_fn(p0, batch, cfg0)
+        lP = loss_fn(pP, batch, cfgP)
+        assert abs(float(l0) - float(lP)) < 1e-4
+
+    def test_rglru_cache_continuation(self):
+        """Splitting a sequence across prefill+decode matches one pass."""
+        cfg = smoke_config("recurrentgemma-9b")
+        params = init_params(cfg, jax.random.key(0))
+        S = 24
+        toks = jnp.asarray(
+            np.random.default_rng(1).integers(0, cfg.vocab, (1, S + 1)),
+            jnp.int32)
+        x, _ = M.forward(params, {"tokens": toks}, cfg, mode="train")
+        full = M.logits_from_hidden(params, x[:, -1:], cfg)
+        _, caches = prefill(params, {"tokens": toks[:, :S]}, cfg,
+                            s_max=S + 4)
+        dec, _ = decode_step(params, caches,
+                             {"tokens": toks[:, S:],
+                              "positions": jnp.full((1, 1), S, jnp.int32)},
+                             cfg)
+        np.testing.assert_allclose(np.asarray(dec, np.float32),
+                                   np.asarray(full, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_full_config_exact(self, arch):
+        """The registered full configs carry the assignment's numbers."""
+        cfg = get_config(arch)
+        expected = {
+            "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+            "h2o_danube_1_8b": (24, 2560, 32, 8, 6912, 32000),
+            "qwen2_5_14b": (48, 5120, 40, 8, 13824, 152064),
+            "phi3_mini_3_8b": (32, 3072, 32, 32, 8192, 32064),
+            "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+            "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+            "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+            "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151936),
+            "rwkv6_1_6b": (24, 2048, 32, 32, 7168, 65536),
+            "phi_3_vision_4_2b": (32, 3072, 32, 32, 8192, 32064),
+        }
+        from repro.configs import canonical
+        L_, D, H, KV, F, V = expected[canonical(arch)]
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L_, D, H, KV, F, V), arch
+
+    def test_moe_configs(self):
+        g = get_config("granite-moe-3b-a800m")
+        assert g.moe.n_experts == 40 and g.moe.top_k == 8
+        q = get_config("qwen3-moe-235b-a22b")
+        assert q.moe.n_experts == 128 and q.moe.top_k == 8
+        assert q.resolved_head_dim == 128
+
+    def test_param_counts_plausible(self):
+        # analytic param counts in the right ballpark (±40% of nameplate)
+        approx = {"qwen2_5_14b": 14e9, "internlm2_20b": 20e9,
+                  "rwkv6_1_6b": 1.6e9, "h2o_danube_1_8b": 1.8e9,
+                  "qwen3_moe_235b_a22b": 235e9}
+        for arch, n in approx.items():
+            got = get_config(arch).n_params()
+            assert 0.6 * n < got < 1.5 * n, (arch, got, n)

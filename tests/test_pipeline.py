@@ -1,0 +1,265 @@
+"""Pipeline: stage semantics, fault tolerance, end-to-end + analytics."""
+import glob
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro import analytics
+from repro.core.assoc import Assoc
+from repro.db import EdgeStore, MultiInstanceDB
+from repro.pipeline import (FaultInjector, PipelineConfig, Runner, Task,
+                            TrafficConfig, botnet_truth, run_pipeline)
+from repro.pipeline import pcap as P
+from repro.pipeline import stages
+
+
+class TestPcapCodec:
+    def test_write_read_roundtrip(self, tmp_path):
+        cfg = TrafficConfig(n_hosts=64, pkt_rate=5000.0, seed=1)
+        rec = P.synth_packets(cfg, 0.05)
+        path = str(tmp_path / "x.pcap")
+        P.write_pcap(path, rec)
+        back = P.read_pcap(path)
+        assert back.shape == rec.shape
+        np.testing.assert_array_equal(back["src"], rec["src"])
+
+    def test_gzip_roundtrip(self, tmp_path):
+        cfg = TrafficConfig(n_hosts=64, pkt_rate=5000.0, seed=1)
+        rec = P.synth_packets(cfg, 0.02)
+        path = str(tmp_path / "x.pcap.gz")
+        P.write_pcap(path, rec, compress=True)
+        assert P.read_pcap(path).shape == rec.shape
+
+    def test_timestamps_sorted(self):
+        rec = P.synth_packets(TrafficConfig(seed=2, pkt_rate=2000.0,
+                                            n_hosts=32), 0.1)
+        ts = rec["ts_sec"].astype(np.float64) + rec["ts_usec"] * 1e-6
+        assert (np.diff(ts) >= 0).all()
+
+    def test_tsv_fields(self):
+        rec = P.synth_packets(TrafficConfig(seed=3, pkt_rate=1000.0,
+                                            n_hosts=32), 0.05)
+        tsv = P.records_to_tsv(rec)
+        header = tsv.split("\n")[0].split("\t")
+        assert header[0] == "id"
+        assert set(P.TSV_FIELDS) <= set(header)
+
+    def test_botnet_truth_deterministic(self):
+        cfg = TrafficConfig(seed=11)
+        assert botnet_truth(cfg) == botnet_truth(cfg)
+
+
+class TestStages:
+    def test_split_preserves_records(self, tmp_path):
+        cfg = TrafficConfig(n_hosts=64, pkt_rate=20000.0, seed=1)
+        rec = P.synth_packets(cfg, 0.05)
+        src = str(tmp_path / "f.pcap")
+        P.write_pcap(src, rec)
+        res = stages.split(src, split_size=16 * 1024)
+        assert len(res.outputs) > 1
+        total = sum(P.read_pcap(p).shape[0] for p in res.outputs)
+        assert total == rec.shape[0]
+
+    def test_expansion_accounting(self, tmp_path):
+        """Uncompress expands (paper: 2 GB → 6 GB per file)."""
+        cfg = TrafficConfig(n_hosts=64, pkt_rate=20000.0, seed=1)
+        raw = str(tmp_path / "f.pcap.gz")
+        gen = stages.generate(raw, cfg, 0.05)
+        unc = stages.uncompress(raw)
+        assert unc.bytes_out > unc.bytes_in  # decompression expands
+
+
+class TestRunner:
+    def _tasks(self, results, n=8):
+        def make(i):
+            def fn():
+                results.append(i)
+                return i
+            return fn
+        return [Task(f"t{i}", make(i), stage="s") for i in range(n)]
+
+    def test_runs_all(self):
+        out = []
+        recs = Runner(n_workers=3).run(self._tasks(out))
+        assert len(recs) == 8 and sorted(out) == list(range(8))
+
+    def test_dependencies_respected(self):
+        order = []
+        t1 = Task("a", lambda: order.append("a"))
+        t2 = Task("b", lambda: order.append("b"), deps=("a",))
+        t3 = Task("c", lambda: order.append("c"), deps=("b",))
+        Runner(n_workers=2).run([t3, t1, t2])
+        assert order == ["a", "b", "c"]
+
+    def test_fault_injection_retries(self):
+        out = []
+        fi = FaultInjector(kill_rate=0.5, seed=0, max_kills=5)
+        recs = Runner(n_workers=2, fault_injector=fi,
+                      max_retries=10).run(self._tasks(out))
+        assert len(recs) == 8
+        assert fi.kills > 0          # faults actually happened
+
+    def test_permanent_failure_raises(self):
+        def boom():
+            raise RuntimeError("hard failure")
+        with pytest.raises(RuntimeError, match="failed permanently"):
+            Runner(n_workers=1, max_retries=1).run(
+                [Task("x", boom, stage="s")])
+
+    def test_journal_restart_skips_done(self, tmp_path):
+        journal = str(tmp_path / "j.jsonl")
+        counter = {"n": 0}
+
+        def work():
+            counter["n"] += 1
+        tasks = [Task(f"t{i}", work, stage="s") for i in range(4)]
+        Runner(n_workers=2, journal_path=journal).run(tasks)
+        assert counter["n"] == 4
+        # restart: journal says done → zero re-execution
+        Runner(n_workers=2, journal_path=journal).run(tasks)
+        assert counter["n"] == 4
+
+    def test_straggler_speculation(self):
+        """A hung task gets a backup copy; first finisher wins."""
+        state = {"calls": 0}
+
+        def sometimes_slow():
+            with_lock = state["calls"]
+            state["calls"] += 1
+            if with_lock == 0:
+                time.sleep(3.0)      # straggler on first execution
+            return "done"
+        fast = [Task(f"f{i}", lambda: time.sleep(0.01), stage="s")
+                for i in range(6)]
+        slow = Task("slow", sometimes_slow, stage="s")
+        r = Runner(n_workers=3, straggler_factor=2.0, straggler_min_s=0.3)
+        t0 = time.time()
+        recs = r.run(fast + [slow])
+        assert "slow" in recs
+        assert time.time() - t0 < 2.9   # did not wait for the straggler
+        assert state["calls"] >= 2      # speculation happened
+
+
+class TestEndToEnd:
+    def test_pipeline_and_detection(self, tmp_path):
+        tcfg = TrafficConfig(n_hosts=128, pkt_rate=100.0, n_bots=10,
+                             beacon_period_s=4.0, beacon_jitter_s=0.1,
+                             seed=5)
+        cfg = PipelineConfig(workdir=str(tmp_path), n_files=1,
+                             duration_per_file_s=40.0,
+                             split_size=96 * 1024, traffic=tcfg,
+                             n_workers=2)
+        db = EdgeStore(n_tablets=4)
+        stats = run_pipeline(cfg, db)
+        assert stats["db_entries"] > 0
+        for s in ("uncompress", "split", "parse", "sort", "sparse",
+                  "ingest"):
+            assert s in stats["stages"], s
+
+        # analytics find the injected C2
+        E = Assoc()
+        for p in sorted(glob.glob(os.path.join(str(tmp_path), "*.E.npz"))):
+            E = E + Assoc.load(p)
+        truth = botnet_truth(tcfg)
+        rep = analytics.detect_c2(E, top_k=3)
+        assert truth["c2"] in list(rep.hosts), \
+            f"C2 {truth['c2']} not in {rep.hosts}"
+
+        # the database answers Fig. 2's query
+        conns = db.connections(truth["c2"])
+        assert len(conns) >= 10
+        deg = db.degree(f"ip.dst|{truth['c2']}")
+        assert deg > 0
+
+    def test_pipeline_restart_resumes(self, tmp_path):
+        tcfg = TrafficConfig(n_hosts=64, pkt_rate=500.0, seed=6)
+        cfg = PipelineConfig(workdir=str(tmp_path), n_files=2,
+                             duration_per_file_s=1.0, traffic=tcfg,
+                             n_workers=2)
+        db = EdgeStore(n_tablets=2)
+        run_pipeline(cfg, db)
+        n1 = db.n_entries
+        # rerun with same journal: all tasks skipped, no double ingest
+        db2 = EdgeStore(n_tablets=2)
+        run_pipeline(cfg, db2)
+        assert db2.n_entries == 0
+
+
+class TestMultiInstance:
+    def test_routing_covers_instances(self):
+        db = MultiInstanceDB(n_instances=4, tablets_per_instance=2)
+        for i in range(32):
+            E = Assoc(f"p{i},", "ip.src|1.2.3.4,", "1,")
+            db.put(E, file_id=f"file{i}")
+        used = sum(1 for inst in db.instances if inst.n_entries > 0)
+        assert used >= 3
+        assert db.degree("ip.src|1.2.3.4") == 32.0
+
+
+from hypothesis import given, settings, strategies as st
+
+
+class TestRunnerProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 12), st.integers(1, 4), st.data())
+    def test_random_dag_executes_each_task_once_in_order(self, n, workers,
+                                                         data):
+        """Property: any random DAG runs every task exactly once, and
+        every task starts only after all its dependencies finished."""
+        import threading
+        deps = {}
+        for i in range(n):
+            pool = list(range(i))
+            k = data.draw(st.integers(0, min(2, len(pool))))
+            deps[i] = tuple(f"t{j}" for j in
+                            (data.draw(st.permutations(pool))[:k] if pool
+                             else []))
+        lock = threading.Lock()
+        finished = set()
+        runs = []
+
+        def make(i):
+            def fn():
+                with lock:
+                    for d in deps[i]:
+                        assert int(d[1:]) in finished, \
+                            f"t{i} ran before {d}"
+                    runs.append(i)
+                    finished.add(i)
+            return fn
+
+        tasks = [Task(f"t{i}", make(i), deps=deps[i], stage="s")
+                 for i in range(n)]
+        recs = Runner(n_workers=workers, speculative=False).run(tasks)
+        assert len(recs) == n
+        assert sorted(runs) == list(range(n))
+
+
+class TestElasticity:
+    def test_set_workers_mid_run(self):
+        """Worker pool grows while a run is in flight (elastic scale-up)."""
+        import threading
+        r = Runner(n_workers=1, speculative=False)
+        started = threading.Event()
+
+        def slowish(i):
+            def fn():
+                started.set()
+                time.sleep(0.05)
+            return fn
+        tasks = [Task(f"t{i}", slowish(i), stage="s") for i in range(12)]
+
+        def grow():
+            started.wait(timeout=5)
+            r.set_workers(4)
+        g = threading.Thread(target=grow)
+        g.start()
+        t0 = time.time()
+        recs = r.run(tasks)
+        g.join()
+        assert len(recs) == 12
+        # 12 × 50ms on 1 worker ≈ 0.6s; elastic growth must beat that
+        assert time.time() - t0 < 0.55

@@ -1,0 +1,96 @@
+"""Device sparse payloads: COO/CSR semiring ops vs dense oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COO, MAX_PLUS, MIN_PLUS, OR_AND, PLUS_TIMES,
+                        coo_to_csr, csr_to_coo, col_degree, row_degree,
+                        spmm, spmv, spmv_t)
+from repro.core import graph
+
+
+def random_coo(rng, nr=8, nc=6, nnz=20):
+    rows = rng.integers(0, nr, nnz)
+    cols = rng.integers(0, nc, nnz)
+    vals = rng.integers(1, 5, nnz).astype(np.float32)
+    return COO.from_numpy(rows, cols, vals, (nr, nc))
+
+
+class TestCOO:
+    def test_from_numpy_coalesces(self):
+        m = COO.from_numpy([0, 0, 1], [1, 1, 2], [1.0, 2.0, 3.0], (2, 3))
+        assert m.nnz == 2
+        assert float(m.to_dense()[0, 1]) == 3.0
+
+    def test_csr_roundtrip(self):
+        rng = np.random.default_rng(0)
+        m = random_coo(rng)
+        back = csr_to_coo(coo_to_csr(m))
+        np.testing.assert_allclose(np.asarray(back.to_dense()),
+                                   np.asarray(m.to_dense()))
+
+    @pytest.mark.parametrize("ring,combine", [
+        (PLUS_TIMES, lambda A, x: A @ x),
+        (MIN_PLUS, lambda A, x: np.where(
+            (A != 0).any(1), np.min(np.where(A != 0, A + x[None, :],
+                                             np.inf), axis=1), np.inf)),
+    ])
+    def test_spmv_semirings(self, ring, combine):
+        rng = np.random.default_rng(1)
+        m = random_coo(rng)
+        x = rng.normal(0, 1, m.shape[1]).astype(np.float32)
+        got = np.asarray(spmv(m, jnp.asarray(x), ring))
+        A = np.asarray(m.to_dense())
+        exp = combine(A, x)
+        mask = exp != np.inf
+        np.testing.assert_allclose(got[mask], exp[mask], rtol=1e-5)
+
+    def test_spmm_matches_dense(self):
+        rng = np.random.default_rng(2)
+        m = random_coo(rng)
+        X = rng.normal(0, 1, (m.shape[1], 4)).astype(np.float32)
+        got = np.asarray(spmm(m, jnp.asarray(X)))
+        np.testing.assert_allclose(got, np.asarray(m.to_dense()) @ X,
+                                   rtol=1e-5)
+
+    def test_degrees(self):
+        m = COO.from_numpy([0, 0, 1], [0, 1, 1], [2.0, 1.0, 1.0], (3, 2))
+        np.testing.assert_allclose(np.asarray(row_degree(m)), [2, 1, 0])
+        np.testing.assert_allclose(np.asarray(col_degree(m)), [1, 2])
+        np.testing.assert_allclose(
+            np.asarray(row_degree(m, weighted=True)), [3, 1, 0])
+
+
+class TestGraph:
+    def test_pagerank_sums_to_one(self):
+        m = COO.from_numpy([0, 1, 2], [1, 2, 0], [1., 1., 1.], (3, 3))
+        pr = graph.pagerank(m, num_iters=30)
+        assert abs(float(pr.sum()) - 1.0) < 1e-4
+        # symmetric cycle → uniform
+        np.testing.assert_allclose(np.asarray(pr), 1 / 3, atol=1e-4)
+
+    def test_pagerank_sink_handling(self):
+        # node 2 is dangling
+        m = COO.from_numpy([0, 1], [1, 2], [1., 1.], (3, 3))
+        pr = graph.pagerank(m, num_iters=50)
+        assert abs(float(pr.sum()) - 1.0) < 1e-4
+        assert float(pr[2]) > float(pr[0])
+
+    def test_bfs_reachable(self):
+        m = COO.from_numpy([0, 1], [1, 2], [1., 1.], (4, 4))
+        seed = jnp.zeros(4).at[0].set(1.0)
+        out = graph.bfs_reachable(m, seed, hops=2)
+        assert list(np.asarray(out)) == [True, True, True, False]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 50))
+def test_property_spmv_transpose_consistency(seed):
+    rng = np.random.default_rng(seed)
+    m = random_coo(rng, nr=6, nc=5, nnz=12)
+    x = rng.normal(0, 1, m.shape[0]).astype(np.float32)
+    got = np.asarray(spmv_t(m, jnp.asarray(x)))
+    exp = np.asarray(m.to_dense()).T @ x
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-5)

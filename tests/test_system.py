@@ -1,0 +1,93 @@
+"""End-to-end system behaviour: the paper's full loop + the framework
+integration (pipeline → database → analytics → LM training → serving)."""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analytics
+from repro.configs import smoke_config
+from repro.core.assoc import Assoc
+from repro.data import TokenStream
+from repro.db import MultiInstanceDB
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import init_params
+from repro.pipeline import (PipelineConfig, TrafficConfig, botnet_truth,
+                            run_pipeline)
+from repro.train import OptConfig, adamw_init, make_train_step
+
+
+@pytest.fixture(scope="module")
+def pipeline_run(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("system"))
+    tcfg = TrafficConfig(n_hosts=128, pkt_rate=120.0, n_bots=10,
+                         beacon_period_s=4.0, beacon_jitter_s=0.1, seed=13)
+    cfg = PipelineConfig(workdir=d, n_files=1, duration_per_file_s=40.0,
+                         split_size=96 * 1024, traffic=tcfg, n_workers=2)
+    db = MultiInstanceDB(n_instances=2, tablets_per_instance=2)
+    stats = run_pipeline(cfg, db)
+    return d, tcfg, db, stats
+
+
+class TestPaperLoop:
+    def test_pipeline_populates_database(self, pipeline_run):
+        _, _, db, stats = pipeline_run
+        assert stats["db_entries"] > 1000
+        assert all(s in stats["stages"] for s in
+                   ("uncompress", "split", "parse", "sort", "sparse",
+                    "ingest"))
+
+    def test_fig2_query_from_database(self, pipeline_run):
+        _, tcfg, db, _ = pipeline_run
+        c2 = botnet_truth(tcfg)["c2"]
+        conns = db.connections(c2)
+        assert len(conns) >= 5
+        assert db.degree(f"ip.dst|{c2}") >= 10
+
+    def test_degree_table_consistency(self, pipeline_run):
+        """TedgeDeg (combiner-maintained) equals recount from triples."""
+        d, tcfg, db, _ = pipeline_run
+        E = Assoc()
+        for p in sorted(glob.glob(os.path.join(d, "*.E.npz"))):
+            E = E + Assoc.load(p)
+        c2 = botnet_truth(tcfg)["c2"]
+        col = f"ip.dst|{c2}"
+        recount = float(np.asarray(
+            E[:, [col]].logical().sum(0).triples()[2]).sum())
+        assert db.degree(col) == recount
+
+    def test_detection_from_ingested_graph(self, pipeline_run):
+        d, tcfg, _, _ = pipeline_run
+        E = Assoc()
+        for p in sorted(glob.glob(os.path.join(d, "*.E.npz"))):
+            E = E + Assoc.load(p)
+        rep = analytics.detect_c2(E, top_k=3)
+        assert botnet_truth(tcfg)["c2"] in list(rep.hosts)
+
+
+class TestFrameworkIntegration:
+    def test_train_lm_on_pipeline_corpus(self, pipeline_run):
+        """The Fig. 1 story: same environment ingests AND learns."""
+        d, _, _, _ = pipeline_run
+        pattern = os.path.join(d, "*.tsv")
+        assert glob.glob(pattern), "pipeline left no TSV corpus"
+        stream = TokenStream(pattern, seq_len=64, batch=2)
+        cfg = smoke_config("h2o-danube-1.8b")
+        mesh = make_smoke_mesh(len(jax.devices()))
+        params = init_params(cfg, jax.random.key(0))
+        opt_state = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3,
+                                                      warmup_steps=2),
+                                       mesh), donate_argnums=(0, 1))
+        losses = []
+        with mesh:
+            for _ in range(10):
+                batch = {k: jnp.minimum(jnp.asarray(v), cfg.vocab - 1)
+                         for k, v in stream.next_batch().items()}
+                params, opt_state, m = step(params, opt_state, batch)
+                losses.append(float(m["loss"]))
+        assert all(np.isfinite(losses))
+        assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
