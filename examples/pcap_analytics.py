@@ -1,7 +1,12 @@
-"""Deep-dive analytics over a captured window (paper §III-A references).
+"""Deep-dive analytics over a captured window (paper §III-A references),
+served entirely through the D4M database binding.
 
-Power-law background modeling [26], dimensional analysis [25], scan
-detection, and PageRank centrality [23] over the incidence matrix.
+The window is ingested once — ``put(T, putval(E, '1,'))`` — and every
+analytic below queries the database through ``DB``/``DBTable``
+subscripts: column-block scans route through the transpose table
+(TedgeT), the power-law background reads the combiner-maintained degree
+table (TedgeDeg), and chained algebra over table queries builds a lazy
+operator DAG that executes in one fused pass.
 
 Run:  PYTHONPATH=src python examples/pcap_analytics.py
 """
@@ -10,51 +15,63 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro import analytics
-from repro.core import StartsWith, graph, parse_tsv, val2col
+from repro.core import parse_tsv, val2col
+from repro.db import DB, put
 from repro.pipeline import TrafficConfig, botnet_truth
 from repro.pipeline.pcap import records_to_tsv, synth_packets
 
-# --- capture a window ------------------------------------------------------
+# --- capture a window and ingest it ----------------------------------------
 traffic = TrafficConfig(n_hosts=512, pkt_rate=400.0, n_bots=16,
                         beacon_period_s=4.0, seed=7)
 rec = synth_packets(traffic, 60.0)
 E = val2col(parse_tsv(records_to_tsv(rec)))
-print(f"window: {E.shape[0]} packets, {E.shape[1]} field|values")
+
+T = DB('Tedge', 'TedgeT', 'TedgeDeg', n_instances=2, tablets_per_instance=4)
+put(T, E.putval("1,"))
+del E  # everything below reads back through the binding
+
+window = T[:, :].eval()
+print(f"window: {window.shape[0]} packets, {window.shape[1]} field|values "
+      f"({T.n_entries} db entries)")
 
 # --- dimensional analysis [25] ---------------------------------------------
 print("\nfield structure:")
-for field, st in analytics.field_stats(E).items():
+for field, st in analytics.field_stats(window).items():
     print(f"  {field:22s} card={st['cardinality']:6d} "
           f"H={st['entropy_bits']:6.2f} bits")
 print("top correlated field pairs:",
-      analytics.top_correlated_pairs(E, top_k=3))
+      analytics.top_correlated_pairs(window, top_k=3))
 
-# --- power-law background [26] ----------------------------------------------
-deg = E[:, StartsWith("ip.dst|")].sum(0)
-d = jnp.asarray(np.asarray(deg.triples()[2], np.float32))
-fit = analytics.fit_rank_size(d)
-print(f"\nrank-size fit: alpha={float(fit.alpha):.2f} "
+# --- power-law background [26] — straight from TedgeDeg --------------------
+fit = analytics.fit_degree_table(T, "ip.dst|")
+print(f"\nrank-size fit (from degree table): alpha={float(fit.alpha):.2f} "
       f"R2={float(fit.r2):.3f} (internet traffic ~ powerlaw)")
 
-# --- anomaly detection -------------------------------------------------------
+# --- anomaly detection — detectors query the table directly ----------------
 truth = botnet_truth(traffic)
-rep = analytics.detect_c2(E, top_k=5)
+rep = analytics.detect_c2(T, top_k=5)
 print(f"\ninjected C2: {truth['c2']} on port {truth['c2_port']}")
 for h, s in zip(rep.hosts, rep.scores):
     print(f"  candidate {h:16s} score={s:.3f}"
           + ("   <-- C2" if h == truth["c2"] else ""))
 
-scanners = analytics.scan_detect(E, min_fanout=24)
+scanners = analytics.scan_detect(T, min_fanout=24)
 print("scan-like sources:", scanners[:5] if len(scanners) else "none")
 
-# --- centrality [23] ----------------------------------------------------------
-adj = graph.square(graph.adjacency(E))
-pr = graph.pagerank(adj.device_coo(jnp.float32), num_iters=30)
+# --- Fig. 2: one host's connections as a lazy chain over column scans ------
+c2 = truth["c2"]
+touched = (T[:, f"ip.src|{c2},"].sum(1) + T[:, f"ip.dst|{c2},"].sum(1))
+conns = (touched.logical().T * T[:, "ip.dst|*,"]
+         ) + (touched.logical().T * T[:, "ip.src|*,"])
+print(f"\nconnections of {c2}: {conns.eval().nnz} field|value endpoints "
+      f"(scan routing: {T.stats})")
+
+# --- centrality [23] — mesh-sharded PageRank from the binding --------------
+hosts, pr = analytics.distributed.pagerank_table(T, num_iters=30)
 top = np.argsort(np.asarray(pr))[::-1][:5]
 print("\ntop PageRank hosts:")
 for i in top:
-    print(f"  {adj.row[i]:16s} {float(pr[i]):.4f}")
+    print(f"  {hosts[i]:16s} {float(pr[i]):.4f}")

@@ -3,13 +3,14 @@ from .anomaly import C2Report, detect_c2, scan_detect
 from .dimensional import field_correlation, field_names, field_stats, \
     top_correlated_pairs
 from .powerlaw import PowerLawFit, background_scores, degree_histogram, \
-    fit_rank_size
+    fit_degree_table, fit_rank_size
 from . import distributed
 
 __all__ = [
     "detect_c2", "scan_detect", "C2Report",
     "field_stats", "field_names", "field_correlation",
     "top_correlated_pairs",
-    "fit_rank_size", "degree_histogram", "background_scores", "PowerLawFit",
+    "fit_rank_size", "fit_degree_table", "degree_histogram",
+    "background_scores", "PowerLawFit",
     "distributed",
 ]

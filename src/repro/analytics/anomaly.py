@@ -13,17 +13,26 @@ with jit'd JAX scoring (device side) — the paper's §III-A analytic menu:
 
 ``detect_c2`` fuses the three scores; validated against
 ``pipeline.botnet_truth`` in the test suite.
+
+Detectors accept any object speaking the Assoc selection grammar: an
+in-memory :class:`Assoc`, a deferred :class:`~repro.core.expr.LazyAssoc`,
+or a live :class:`~repro.db.binding.DBTable` — in the last case each
+``E[:, StartsWith(...)]`` block below becomes a pushed-down transpose-
+table scan that reads only that column band from the database.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.assoc import Assoc, StartsWith
+from ..core.expr import LazyAssoc
 from . import powerlaw
+
+Queryable = Union[Assoc, LazyAssoc, "DBTable"]  # anything with E[r, c]
 
 
 class C2Report(NamedTuple):
@@ -59,8 +68,9 @@ def _fuse(fanin, regularity, port_conc, total_pkts):
     return jnp.log1p(fanin) * regularity * port_conc * port_conc
 
 
-def detect_c2(E: Assoc, sep: str = "|", top_k: int = 10) -> C2Report:
-    """Run the fused detector over an incidence matrix (stage-5 output)."""
+def detect_c2(E: Queryable, sep: str = "|", top_k: int = 10) -> C2Report:
+    """Run the fused detector over an incidence matrix (stage-5 output)
+    or directly over the database through a :class:`DBTable` binding."""
     Edst = E[:, StartsWith(f"ip.dst{sep}")]
     Esrc = E[:, StartsWith(f"ip.src{sep}")]
     Etime = E[:, StartsWith(f"frame.time{sep}")]
@@ -144,7 +154,8 @@ def detect_c2(E: Assoc, sep: str = "|", top_k: int = 10) -> C2Report:
                     regularity[order], conc[order])
 
 
-def scan_detect(E: Assoc, sep: str = "|", min_fanout: int = 32) -> np.ndarray:
+def scan_detect(E: Queryable, sep: str = "|",
+                min_fanout: int = 32) -> np.ndarray:
     """Port/host-scan detector: sources touching many distinct dsts with
     single packets (logical out-degree ≈ packet out-degree)."""
     Esrc = E[:, StartsWith(f"ip.src{sep}")]

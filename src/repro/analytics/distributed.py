@@ -96,6 +96,31 @@ def pagerank_sharded(adj: COO, mesh: Mesh, num_iters: int = 20,
     return rank
 
 
+def pagerank_table(T, mesh: Mesh | None = None, num_iters: int = 20,
+                   src_field: str = "ip.src", dst_field: str = "ip.dst",
+                   sep: str = "|", axis: str = "data"
+                   ) -> tuple[np.ndarray, jax.Array]:
+    """PageRank served straight from the database binding.
+
+    Queries the src/dst column blocks through the :class:`DBTable`
+    selection grammar (pushed-down transpose-table scans), builds the
+    host adjacency, then runs the mesh-sharded PageRank on the device
+    payload.  Returns ``(node_keys, ranks)`` aligned by index.
+    """
+    from ..core import graph
+
+    E = T[:, f"{src_field}{sep}*,"] + T[:, f"{dst_field}{sep}*,"]
+    adj = graph.square(graph.adjacency(
+        E, src_field=src_field, dst_field=dst_field, sep=sep))
+    if adj.nnz == 0:
+        return np.empty((0,), dtype=str), jnp.zeros((0,), jnp.float32)
+    if mesh is None:
+        mesh = Mesh(np.asarray(jax.devices()), (axis,))
+    ranks = pagerank_sharded(adj.device_coo(jnp.float32), mesh,
+                             num_iters=num_iters, axis=axis)
+    return adj.row, ranks
+
+
 def spmv_weighted_rowsum(m: COO, mesh: Mesh, axis: str = "data"
                          ) -> jax.Array:
     """Row sums (weighted out-degree), sharded."""

@@ -68,6 +68,20 @@ def degree_histogram(degrees: jax.Array, n_bins: int = 64):
     return centers, counts
 
 
+def fit_degree_table(T, prefix: str = "ip.dst|") -> PowerLawFit:
+    """Fit the rank-size background straight from the database's
+    combiner-maintained degree table (TedgeDeg) through a
+    :class:`~repro.db.binding.DBTable` binding — no incidence-matrix
+    materialization, which is how the paper sizes the background model
+    at ingest rates."""
+    import numpy as np
+    deg = T.degree_assoc(prefix)
+    if deg.nnz == 0:
+        return fit_rank_size(jnp.zeros((1,), jnp.float32))
+    d = jnp.asarray(np.asarray(deg.triples()[2], np.float32))
+    return fit_rank_size(d)
+
+
 @jax.jit
 def background_scores(degrees: jax.Array) -> jax.Array:
     """Anomaly score per vertex: positive log-residual above the fitted

@@ -8,6 +8,7 @@ The paper's primary contribution as a composable JAX library:
 * :mod:`repro.core.graph` — incidence→adjacency, degree tables, PageRank.
 """
 from .assoc import All, Assoc, KeyRange, StartsWith
+from .expr import LazyAssoc, lazy
 from .schema import col2val, parse_tsv, to_tsv, val2col
 from .semiring import (MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS, OR_AND,
                        PLUS_TIMES, Semiring)
@@ -16,7 +17,7 @@ from .sparse import COO, CSR, coo_to_csr, csr_to_coo, col_degree, row_degree, \
 from . import graph
 
 __all__ = [
-    "Assoc", "All", "KeyRange", "StartsWith",
+    "Assoc", "All", "KeyRange", "StartsWith", "LazyAssoc", "lazy",
     "parse_tsv", "to_tsv", "val2col", "col2val",
     "Semiring", "PLUS_TIMES", "MIN_PLUS", "MAX_PLUS", "MAX_MIN", "MAX_TIMES",
     "OR_AND",

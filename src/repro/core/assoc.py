@@ -447,6 +447,16 @@ class Assoc:
         return schema.col2val(self, sep)
 
     # ------------------------------------------------------------------
+    # deferred algebra bridge
+    # ------------------------------------------------------------------
+    def lazy(self) -> "LazyAssoc":
+        """Wrap into a deferred expression (see :mod:`repro.core.expr`):
+        subsequent algebra builds an operator DAG that a planner fuses
+        and executes in one pass."""
+        from .expr import LazyAssoc
+        return LazyAssoc.leaf(self)
+
+    # ------------------------------------------------------------------
     # device bridge
     # ------------------------------------------------------------------
     def device_coo(self, dtype=None) -> S.COO:

@@ -30,7 +30,6 @@ from . import sparse as S
 def adjacency(E: Assoc, src_field: str = "ip.src", dst_field: str = "ip.dst",
               sep: str = "|") -> Assoc:
     """Directed adjacency  A[src, dst] = #packets  from the incidence matrix."""
-    Esrc = E[StartsWith(f"{src_field}{sep}"), :].T  # wrong axis guard below
     # columns are field|value ⇒ select column blocks:
     Esrc = E[:, StartsWith(f"{src_field}{sep}")]
     Edst = E[:, StartsWith(f"{dst_field}{sep}")]

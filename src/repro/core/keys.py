@@ -117,9 +117,22 @@ def resolve_selector(sel, dictionary: np.ndarray) -> np.ndarray:
             return np.nonzero(KeyRange(str(parts[0]), str(parts[2]))
                               .mask(dictionary))[0]
     wanted = parse_keys(sel)
+    if dictionary.shape[0] == 0 or wanted.shape[0] == 0:
+        return np.empty((0,), np.int64)
+    # D4M prefix atoms: a key ending in '*' selects every key with that
+    # prefix ('ip.src|*,' → the whole ip.src column block).
+    stars = np.char.endswith(wanted, "*")
+    if stars.any():
+        m = np.zeros(dictionary.shape[0], dtype=bool)
+        for k, is_prefix in zip(wanted, stars):
+            if is_prefix:
+                m |= StartsWith(str(k[:-1])).mask(dictionary)
+            else:
+                m |= dictionary == k
+        return np.nonzero(m)[0]
     idx = np.searchsorted(dictionary, wanted)
     idx = np.clip(idx, 0, max(dictionary.shape[0] - 1, 0))
-    if dictionary.shape[0] == 0:
-        return np.empty((0,), np.int64)
     hit = dictionary[idx] == wanted
-    return idx[hit].astype(np.int64)
+    # sorted-unique: result arrays must keep the sorted-dictionary
+    # invariant every other Assoc path (and _onto alignment) relies on
+    return np.unique(idx[hit]).astype(np.int64)

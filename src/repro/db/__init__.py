@@ -1,3 +1,11 @@
+"""repro.db — the Accumulo-analog edge store and its D4M binding.
+
+Query through :func:`DB` / :class:`DBTable` (tables as associative
+arrays); :class:`EdgeStore` / :class:`MultiInstanceDB` remain the
+storage engines underneath.
+"""
+from .binding import DB, AccidentalDenseError, DBTable, bind, put
 from .edgestore import EdgeStore, MultiInstanceDB, Tablet
 
-__all__ = ["EdgeStore", "MultiInstanceDB", "Tablet"]
+__all__ = ["DB", "DBTable", "put", "bind", "AccidentalDenseError",
+           "EdgeStore", "MultiInstanceDB", "Tablet"]

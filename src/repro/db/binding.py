@@ -1,0 +1,345 @@
+"""The D4M database binding: tables *are* associative arrays.
+
+The paper's whole productivity claim (§IV-G, the 135-line pipeline) rests
+on one API idea::
+
+    T = DB('Tedge', 'TedgeT', 'TedgeDeg')   # bind the table triple
+    put(T, putval(E, '1,'))                  # ingest an incidence matrix
+    A = T[:, 'ip.dst|1.1.1.1,']              # Fig. 2 query — an Assoc
+
+A :class:`DBTable` speaks the full :class:`~repro.core.assoc.Assoc`
+selection grammar — key lists ``'a,b,'``, ranges ``'a,:,b,'``, prefixes
+``'ip.src|*,'`` / :class:`StartsWith`, ``:`` — and routes each subscript
+to the physically right table:
+
+* row subscripts scan **Tedge** (Accumulo scans rows efficiently);
+* column subscripts scan the transpose table **TedgeT**;
+* column queries first consult **TedgeDeg**, the combiner-maintained
+  degree table, when a ``degree_limit`` is set — the paper's guard
+  against *accidental densification* (subscripting a super-node column
+  would otherwise materialize a near-dense result).
+
+Subscripts return :class:`~repro.core.expr.LazyAssoc` nodes, so chains of
+algebra over table queries build one operator DAG: the planner pushes the
+selection down into the tablet scan and fuses the elementwise stages
+(see ``repro.core.expr``).  ``put`` replaces direct tablet mutation with
+batched writers that keep every :class:`MultiInstanceDB` instance's write
+path busy — the paper's parallel-instance ingest topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core import keys as K
+from ..core.assoc import Assoc
+from ..core.expr import LazyAssoc, _is_all
+from .edgestore import EdgeStore, MultiInstanceDB
+
+Backend = Union[EdgeStore, MultiInstanceDB]
+
+_KNOWN_TABLES = ("Tedge", "TedgeT", "TedgeDeg")
+
+
+class AccidentalDenseError(RuntimeError):
+    """A column query would materialize a super-node block.
+
+    Raised when a subscript's column keys have combined TedgeDeg degree
+    above the table's ``degree_limit``.  Re-issue with a tighter selector,
+    or bind with a higher/absent limit (``T.with_degree_limit(None)``).
+    """
+
+    def __init__(self, offenders: list[tuple[str, float]], limit: float):
+        self.offenders = offenders
+        self.limit = limit
+        worst = ", ".join(f"{k} (deg={v:g})" for k, v in offenders[:5])
+        super().__init__(
+            f"column query exceeds degree_limit={limit:g}: {worst}"
+            + (" …" if len(offenders) > 5 else ""))
+
+
+# ---------------------------------------------------------------------------
+# Selector classification — one grammar, three physical routes.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Atoms:
+    """A selector normalized to scan units: exact keys, prefixes, or a
+    single inclusive range; ``kind == 'all'`` means the full axis."""
+    kind: str                       # 'all' | 'atoms' | 'range'
+    keys: tuple = ()
+    prefixes: tuple = ()
+    range: Optional[tuple] = None   # (start, stop)
+
+
+def _classify(sel) -> _Atoms:
+    if _is_all(sel):
+        return _Atoms("all")
+    if isinstance(sel, np.ndarray) and sel.dtype.kind in "biu":
+        raise TypeError(
+            "boolean/integer positional selectors are meaningless against "
+            "a database table — subscript with keys, ranges, or prefixes")
+    if isinstance(sel, K.StartsWith):
+        return _Atoms("atoms", prefixes=(sel.prefix,))
+    if isinstance(sel, K.KeyRange):
+        return _Atoms("range", range=(sel.start, sel.stop))
+    if isinstance(sel, str):
+        parts = K.parse_keys(sel)
+        if parts.shape[0] == 3 and parts[1] == ":":
+            return _Atoms("range", range=(str(parts[0]), str(parts[2])))
+    else:
+        parts = K.parse_keys(sel)
+    keys, prefixes = [], []
+    for p in parts:
+        p = str(p)
+        (prefixes if p.endswith("*") else keys).append(
+            p[:-1] if p.endswith("*") else p)
+    return _Atoms("atoms", keys=tuple(keys), prefixes=tuple(prefixes))
+
+
+# ---------------------------------------------------------------------------
+# DBTable
+# ---------------------------------------------------------------------------
+
+class DBTable:
+    """An Assoc-compatible view of the edge database.
+
+    Subscripts build deferred expressions (:class:`LazyAssoc`); call
+    ``.eval()`` — or any data accessor like ``.triples()`` — to execute.
+    ``stats`` counts which physical route served each scan
+    (``row``/``col``/``full``/``deg``), which the routing tests assert on.
+    """
+
+    def __init__(self, backend: Backend, tables: Sequence[str],
+                 name: str = "Tedge",
+                 degree_limit: Optional[float] = None):
+        unknown = set(tables) - set(_KNOWN_TABLES)
+        if unknown:
+            raise ValueError(f"unknown table(s) {sorted(unknown)}; "
+                             f"expected a subset of {_KNOWN_TABLES}")
+        self.backend = backend
+        self.tables = tuple(tables)
+        self.name = name
+        self.degree_limit = degree_limit
+        self.stats = {"row": 0, "col": 0, "full": 0, "deg": 0}
+
+    # -- construction-time variants ---------------------------------------
+    def with_degree_limit(self, limit: Optional[float]) -> "DBTable":
+        t = DBTable(self.backend, self.tables, self.name, limit)
+        t.stats = self.stats        # share counters with the parent view
+        return t
+
+    @property
+    def _has_transpose(self) -> bool:
+        return "TedgeT" in self.tables
+
+    @property
+    def _is_degree(self) -> bool:
+        return self.tables == ("TedgeDeg",)
+
+    # -- the Assoc surface -------------------------------------------------
+    def __getitem__(self, idx) -> LazyAssoc:
+        rsel, csel = idx if isinstance(idx, tuple) else (idx, None)
+        return LazyAssoc.scan(self, rsel, csel)
+
+    def lazy(self) -> LazyAssoc:
+        return LazyAssoc.scan(self, None, None)
+
+    def eval(self) -> Assoc:
+        return self.lazy().eval()
+
+    @property
+    def T(self) -> LazyAssoc:
+        return self.lazy().T
+
+    def logical(self) -> LazyAssoc:
+        return self.lazy().logical()
+
+    def sum(self, axis: int) -> LazyAssoc:
+        return self.lazy().sum(axis)
+
+    # -- degree table ------------------------------------------------------
+    def degree(self, col_key: str) -> float:
+        """Point TedgeDeg lookup (the combiner-maintained degree)."""
+        self.stats["deg"] += 1
+        return self.backend.degree(col_key)
+
+    def degree_assoc(self, prefix: str = "") -> Assoc:
+        """TedgeDeg as an Assoc (keys × 'degree'), optionally restricted
+        to a column-key prefix — the power-law analytics input."""
+        self.stats["deg"] += 1
+        items = list(self.backend.degree_items(prefix))
+        if not items:
+            return Assoc()
+        keys = np.asarray([k for k, _ in items], dtype=str)
+        vals = np.asarray([v for _, v in items], dtype=np.float64)
+        return Assoc(keys, "degree,", vals)
+
+    # -- ingest ------------------------------------------------------------
+    def put(self, A: Union[Assoc, LazyAssoc], file_id: str = "",
+            batch_size: int = 100_000) -> int:
+        """Batched triple ingest: Tedge + TedgeT + TedgeDeg in one pass.
+
+        Batches model Accumulo's BatchWriter flushes.  On a
+        :class:`MultiInstanceDB` each batch is row-hash partitioned across
+        instances (independent write paths); passing ``file_id`` instead
+        pins the whole put to one instance — the paper's file→instance
+        routing used by the pipeline's stage 6.
+        """
+        if isinstance(A, LazyAssoc):
+            A = A.eval()
+        r, c, v = A.triples()
+        v = np.asarray(v).astype(str)
+        dest = self.backend
+        if file_id and isinstance(dest, MultiInstanceDB):
+            dest = dest.route(file_id)
+        n = 0
+        for lo in range(0, r.shape[0], batch_size):
+            hi = lo + batch_size
+            n += dest.put_triples(r[lo:hi], c[lo:hi], v[lo:hi])
+        return n
+
+    # -- scan execution (called by the LazyAssoc executor) -----------------
+    def _scan(self, rsel, csel) -> Assoc:
+        if self._is_degree:
+            return self._scan_degree(rsel, csel)
+        ratoms = _classify(rsel)
+        catoms = _classify(csel)
+
+        if ratoms.kind != "all":
+            # row-routed: scan Tedge for the requested rows, refine
+            # columns host-side on the (small) result.
+            self.stats["row"] += 1
+            A = self._assemble(self._iter_cells(ratoms, transpose=False))
+            return A if catoms.kind == "all" else A[K.All(), csel]
+        if catoms.kind != "all":
+            # column-routed: the transpose table turns a column query
+            # into a row scan (Accumulo only scans rows efficiently).
+            self._degree_guard(catoms)
+            self.stats["col"] += 1
+            A = self._assemble(self._iter_cells(catoms, transpose=True),
+                               transposed=True)
+            return A
+        self.stats["full"] += 1
+        return self._assemble(self._iter_cells(_Atoms("all"),
+                                               transpose=False))
+
+    def _iter_cells(self, atoms: _Atoms, transpose: bool):
+        be = self.backend
+        if transpose and not self._has_transpose:
+            raise KeyError(
+                f"{self.name}: column query needs the transpose table; "
+                f"bind with DB('Tedge', 'TedgeT', ...)")
+        if atoms.kind == "all":
+            yield from be.scan_everything(transpose=transpose)
+            return
+        if atoms.kind == "range":
+            yield from be.scan_key_range(*atoms.range, transpose=transpose)
+            return
+        if atoms.keys:
+            yield from be.scan_keys(list(atoms.keys), transpose=transpose)
+        for p in atoms.prefixes:
+            yield from be.scan_prefix(p, transpose=transpose)
+
+    @staticmethod
+    def _assemble(cells: Iterable[tuple[str, dict]],
+                  transposed: bool = False) -> Assoc:
+        rows, cols, vals = [], [], []
+        for key, cellmap in cells:
+            for other, v in cellmap.items():
+                rows.append(other if transposed else key)
+                cols.append(key if transposed else other)
+                vals.append(v)
+        if not rows:
+            return Assoc()
+        return Assoc(np.asarray(rows, dtype=str),
+                     np.asarray(cols, dtype=str),
+                     np.asarray(vals, dtype=str), agg="min")
+
+    def _scan_degree(self, rsel, csel) -> Assoc:
+        atoms = _classify(rsel)
+        if atoms.kind == "all":
+            A = self.degree_assoc()     # counts the deg route itself
+        elif atoms.kind == "range":
+            A = self.degree_assoc()[K.KeyRange(*atoms.range), K.All()]
+        else:
+            self.stats["deg"] += 1
+            items = [(k, self.backend.degree(k)) for k in atoms.keys]
+            for p in atoms.prefixes:
+                items.extend(self.backend.degree_items(p))
+            items = [(k, v) for k, v in items if v]
+            if not items:
+                return Assoc()
+            A = Assoc(np.asarray([k for k, _ in items], dtype=str),
+                      "degree,",
+                      np.asarray([v for _, v in items], dtype=np.float64))
+        return A if _is_all(csel) else A[K.All(), csel]
+
+    # -- the anti-"accidental dense" guard ---------------------------------
+    def _degree_guard(self, catoms: _Atoms) -> None:
+        if self.degree_limit is None or "TedgeDeg" not in self.tables:
+            return
+        self.stats["deg"] += 1
+        probed = [(k, self.backend.degree(k)) for k in catoms.keys]
+        for p in catoms.prefixes:
+            probed.extend(self.backend.degree_items(p))
+        if catoms.kind == "range":
+            lo, hi = catoms.range
+            probed.extend((k, d) for k, d in self.backend.degree_items()
+                          if lo <= k <= hi)
+        offenders = [(k, d) for k, d in probed if d > self.degree_limit]
+        if offenders:
+            offenders.sort(key=lambda kv: -kv[1])
+            raise AccidentalDenseError(offenders, self.degree_limit)
+
+    # -- misc --------------------------------------------------------------
+    @property
+    def n_entries(self) -> int:
+        return self.backend.n_entries
+
+    def __repr__(self):
+        kind = "+".join(self.tables)
+        return (f"DBTable({kind} on {type(self.backend).__name__}, "
+                f"degree_limit={self.degree_limit})")
+
+
+# ---------------------------------------------------------------------------
+# Entry points.
+# ---------------------------------------------------------------------------
+
+def DB(*tables: str, backend: Optional[Backend] = None,
+       n_instances: int = 1, tablets_per_instance: int = 4,
+       degree_limit: Optional[float] = None) -> DBTable:
+    """Bind database tables into one associative-array view (paper §III).
+
+    ``DB('Tedge', 'TedgeT')`` enables row *and* column subscripts;
+    adding ``'TedgeDeg'`` wires in the degree guard and
+    :meth:`DBTable.degree_assoc`; ``DB('TedgeDeg')`` alone views just the
+    degree table.  With no ``backend`` a fresh :class:`MultiInstanceDB`
+    (or single :class:`EdgeStore` when ``n_instances == 1``) is created.
+    """
+    if not tables:
+        tables = _KNOWN_TABLES
+    if backend is None:
+        backend = (EdgeStore(n_tablets=tablets_per_instance)
+                   if n_instances == 1 else
+                   MultiInstanceDB(n_instances=n_instances,
+                                   tablets_per_instance=tablets_per_instance))
+    return DBTable(backend, tables, name=tables[0],
+                   degree_limit=degree_limit)
+
+
+def bind(db, degree_limit: Optional[float] = None) -> DBTable:
+    """Wrap an existing store (or pass a DBTable through) — the adapter
+    legacy call sites use to reach the new query surface."""
+    if isinstance(db, DBTable):
+        return db
+    return DBTable(db, _KNOWN_TABLES, degree_limit=degree_limit)
+
+
+def put(T: DBTable, A: Union[Assoc, LazyAssoc], file_id: str = "",
+        batch_size: int = 100_000) -> int:
+    """Module-level D4M idiom: ``put(T, putval(E, '1,'))``."""
+    return T.put(A, file_id=file_id, batch_size=batch_size)

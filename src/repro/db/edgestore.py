@@ -37,6 +37,14 @@ import numpy as np
 from ..core.assoc import Assoc
 
 
+def _warn_query_deprecated(name: str) -> None:
+    import warnings
+    warnings.warn(
+        f"EdgeStore.{name} is deprecated; query through the D4M binding "
+        f"(repro.db.DB / DBTable subscripts) instead.",
+        DeprecationWarning, stacklevel=3)
+
+
 class Tablet:
     """One tablet server: sorted KV with sum-combiner degree support."""
 
@@ -73,13 +81,21 @@ class Tablet:
         return dict(self._rows.get(row, {}))
 
     def scan_range(self, start: str, stop: str) -> Iterable[tuple[str, dict]]:
-        lo = bisect.bisect_left(self._sorted_keys, start)
-        hi = bisect.bisect_right(self._sorted_keys, stop)
-        for k in self._sorted_keys[lo:hi]:
+        for k in self.keys_in_range(start, stop):
             yield k, dict(self._rows[k])
 
     def degree(self, key: str) -> float:
         return self._deg.get(key, 0.0)
+
+    def scan_all(self) -> Iterable[tuple[str, dict]]:
+        """Full tablet scan in key order."""
+        for k in self._sorted_keys:
+            yield k, dict(self._rows[k])
+
+    def keys_in_range(self, start: str, stop: str) -> list[str]:
+        lo = bisect.bisect_left(self._sorted_keys, start)
+        hi = bisect.bisect_right(self._sorted_keys, stop)
+        return self._sorted_keys[lo:hi]
 
     @property
     def n_rows(self) -> int:
@@ -112,9 +128,14 @@ class EdgeStore:
     # -- ingest (the paper's `put(Tedge, putVal(E,'1,'))`) -----------------
     def put(self, E: Assoc) -> int:
         """Insert an incidence matrix: Tedge + transpose + degree table."""
-        import time
         r, c, v = E.triples()
-        v = np.asarray(v).astype(str)
+        return self.put_triples(r, c, np.asarray(v).astype(str))
+
+    def put_triples(self, r: np.ndarray, c: np.ndarray,
+                    v: np.ndarray) -> int:
+        """Raw triple mutation batch (the binding layer's batched-writer
+        entry point — skips Assoc construction on the write path)."""
+        import time
         if self.coordination_cost_s:
             time.sleep(self.coordination_cost_s * self.n_tablets / 16.0)
         # Tedge (row-keyed)
@@ -155,6 +176,74 @@ class EdgeStore:
         """All row keys bearing ``col_key`` — via the transpose table."""
         return self.tablets_t[self._route(np.asarray([col_key]))[0]] \
             .scan_row(col_key)
+
+    # -- binding-layer scans (repro.db.binding routes through these) -------
+    def _table(self, transpose: bool) -> list[Tablet]:
+        return self.tablets_t if transpose else self.tablets
+
+    def scan_keys(self, keys: Sequence[str], transpose: bool = False):
+        """Yield (key, cells) in key order for the given Tedge/TedgeT
+        row keys (sorted so instance streams merge without buffering)."""
+        tabs = self._table(transpose)
+        uniq = sorted(set(keys))
+        if uniq:
+            for key, t in zip(uniq, self._route(np.asarray(uniq, dtype=str))):
+                cells = tabs[t].scan_row(key)
+                if cells:
+                    yield key, cells
+
+    def scan_key_range(self, start: str, stop: str,
+                       transpose: bool = False):
+        """Yield (key, cells) in key order for the inclusive [start, stop]
+        range — every tablet holds a sorted shard (a key lives in exactly
+        one tablet), so a k-way merge over the N tablet range scans
+        streams the result (Accumulo's tablet-parallel scan pattern)."""
+        import heapq
+        yield from heapq.merge(
+            *(t.scan_range(start, stop) for t in self._table(transpose)),
+            key=lambda kv: kv[0])
+
+    def scan_prefix(self, prefix: str, transpose: bool = False):
+        yield from self.scan_key_range(prefix, prefix + "￿",
+                                       transpose=transpose)
+
+    def scan_everything(self, transpose: bool = False):
+        import heapq
+        yield from heapq.merge(
+            *(t.scan_all() for t in self._table(transpose)),
+            key=lambda kv: kv[0])
+
+    def keys_with_prefix(self, prefix: str,
+                         transpose: bool = True) -> list[str]:
+        """Enumerate stored keys under ``prefix`` (degree-guard probe)."""
+        out: list[str] = []
+        for t in self._table(transpose):
+            out.extend(t.keys_in_range(prefix, prefix + "￿"))
+        return out
+
+    def degree_items(self, prefix: str = ""):
+        """Yield (col_key, degree) pairs from TedgeDeg, optionally
+        restricted to a key prefix."""
+        for t in self.tablets:
+            for k, v in t._deg.items():
+                if not prefix or k.startswith(prefix):
+                    yield k, v
+
+    # -- deprecated pre-binding query surface ------------------------------
+    def query_row(self, row_key: str) -> dict[str, str]:
+        """Deprecated: use ``DB(...)`` / ``DBTable[row_key, :]``."""
+        _warn_query_deprecated("query_row")
+        return self.row(row_key)
+
+    def query_col(self, col_key: str) -> dict[str, str]:
+        """Deprecated: use ``DBTable[:, col_key]``."""
+        _warn_query_deprecated("query_col")
+        return self.col(col_key)
+
+    def query_degree(self, col_key: str) -> float:
+        """Deprecated: use ``DBTable.degree(col_key)``."""
+        _warn_query_deprecated("query_degree")
+        return self.degree(col_key)
 
     def degree(self, col_key: str) -> float:
         return self.tablets[self._route(np.asarray([col_key]))[0]] \
@@ -214,6 +303,91 @@ class MultiInstanceDB:
 
     def put(self, E: Assoc, file_id: str = "") -> int:
         return self.route(file_id).put(E)
+
+    def put_triples(self, r: np.ndarray, c: np.ndarray,
+                    v: np.ndarray) -> int:
+        """Row-hash partition a triple batch across instances — the
+        independent parallel write paths behind the paper's 8×16 > 1×128
+        ingest finding, without tying a whole file to one instance."""
+        if not len(r):
+            return 0
+        h = np.asarray([abs(hash(k)) for k in r], dtype=np.int64)
+        part = h % len(self.instances)
+        n = 0
+        for i in np.unique(part):
+            m = part == i
+            n += self.instances[i].put_triples(r[m], c[m], v[m])
+        return n
+
+    # -- binding-layer scans (instance fan-out + merge) --------------------
+    def scan_keys(self, keys, transpose: bool = False):
+        yield from self._merged(lambda inst: inst.scan_keys(
+            keys, transpose=transpose))
+
+    def scan_key_range(self, start: str, stop: str, transpose: bool = False):
+        yield from self._merged(lambda inst: inst.scan_key_range(
+            start, stop, transpose=transpose))
+
+    def scan_prefix(self, prefix: str, transpose: bool = False):
+        yield from self._merged(lambda inst: inst.scan_prefix(
+            prefix, transpose=transpose))
+
+    def scan_everything(self, transpose: bool = False):
+        yield from self._merged(lambda inst: inst.scan_everything(
+            transpose=transpose))
+
+    def _merged(self, scan):
+        """Fan a scan out over all instances, merging cells per key (a
+        key's entries may be spread across instances by batch routing).
+        Instance streams are key-sorted, so this is a streaming k-way
+        merge — no full-result buffering on large scans."""
+        import heapq
+        cur_key = None
+        cur_cells: dict[str, str] = {}
+        for k, cells in heapq.merge(*(scan(inst) for inst in self.instances),
+                                    key=lambda kv: kv[0]):
+            if k == cur_key:
+                cur_cells.update(cells)
+            else:
+                if cur_key is not None:
+                    yield cur_key, cur_cells
+                cur_key, cur_cells = k, dict(cells)
+        if cur_key is not None:
+            yield cur_key, cur_cells
+
+    def keys_with_prefix(self, prefix: str, transpose: bool = True):
+        out: set[str] = set()
+        for inst in self.instances:
+            out.update(inst.keys_with_prefix(prefix, transpose=transpose))
+        return sorted(out)
+
+    def degree_items(self, prefix: str = ""):
+        acc: defaultdict[str, float] = defaultdict(float)
+        for inst in self.instances:
+            for k, v in inst.degree_items(prefix):
+                acc[k] += v
+        return iter(acc.items())
+
+    def query_row(self, row_key: str) -> dict[str, str]:
+        """Deprecated: use ``DBTable[row_key, :]``."""
+        _warn_query_deprecated("query_row")
+        out: dict[str, str] = {}
+        for inst in self.instances:
+            out.update(inst.row(row_key))
+        return out
+
+    def query_col(self, col_key: str) -> dict[str, str]:
+        """Deprecated: use ``DBTable[:, col_key]``."""
+        _warn_query_deprecated("query_col")
+        out: dict[str, str] = {}
+        for inst in self.instances:
+            out.update(inst.col(col_key))
+        return out
+
+    def query_degree(self, col_key: str) -> float:
+        """Deprecated: use ``DBTable.degree(col_key)``."""
+        _warn_query_deprecated("query_degree")
+        return self.degree(col_key)
 
     def degree(self, col_key: str) -> float:
         return sum(inst.degree(col_key) for inst in self.instances)

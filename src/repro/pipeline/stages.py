@@ -150,10 +150,12 @@ def sparse_stage(src: str) -> StageResult:
 # --------------------------------------------------------------------------
 
 def ingest(src: str, db) -> StageResult:
+    from ..db.binding import bind, put
+
     E = Assoc.load(src)
-    n = db.put(E.putval("1,"), file_id=src) if hasattr(db, "route") \
-        else db.put(E.putval("1,"))
+    # paper: put(Tedge, putVal(E,'1,')) through the D4M binding — batched
+    # writers, file→instance routing on multi-instance backends.
     # paper: Edeg = putCol(sum(E.',2),'degree,'); put(TedgeDeg, num2str(Edeg))
-    # (the EdgeStore sum-combiner already maintained TedgeDeg during put;
-    # put_degree is the explicit-path equivalent used by MultiInstanceDB)
+    # (the store's sum combiner maintains TedgeDeg during the same put)
+    n = put(bind(db), E.putval("1,"), file_id=src)
     return StageResult([], os.path.getsize(src), n)

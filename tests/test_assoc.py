@@ -1,7 +1,7 @@
 """Associative-array algebra: unit + property tests (paper §II-B)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, skipping when absent
 
 from repro.core import Assoc, KeyRange, StartsWith
 from repro.core.schema import col2val, parse_tsv, to_tsv, val2col

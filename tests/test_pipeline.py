@@ -199,7 +199,7 @@ class TestMultiInstance:
         assert db.degree("ip.src|1.2.3.4") == 32.0
 
 
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, skipping when absent
 
 
 class TestRunnerProperties:

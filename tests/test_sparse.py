@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, skipping when absent
 
 from repro.core import (COO, MAX_PLUS, MIN_PLUS, OR_AND, PLUS_TIMES,
                         coo_to_csr, csr_to_coo, col_degree, row_degree,
