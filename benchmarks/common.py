@@ -1,7 +1,12 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and machine-readable
+JSON trajectory files (``BENCH_<name>.json``, one run appended per line)."""
 from __future__ import annotations
 
+import json
+import os
 import time
+
+_RECORDS: list = []
 
 
 def timeit(fn, *, repeat: int = 3, warmup: int = 1) -> float:
@@ -17,5 +22,29 @@ def timeit(fn, *, repeat: int = 3, warmup: int = 1) -> float:
     return times[len(times) // 2]
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def smoke() -> bool:
+    """True in CI's reduced-size bench smoke mode (BENCH_SMOKE=1)."""
+    return os.environ.get("BENCH_SMOKE") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = "",
+         **metrics) -> None:
+    """Print the CSV line and record it (plus structured ``metrics`` like
+    ``entries_per_s`` or ``cache_hit_rate``) for :func:`write_trajectory`."""
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                     "derived": derived, **metrics})
+
+
+def write_trajectory(bench: str) -> str:
+    """Append this run's records to ``BENCH_<bench>.json`` (JSONL — one
+    run object per line, so successive runs form a trajectory).  The
+    output directory defaults to cwd; override with BENCH_OUT_DIR."""
+    path = os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                        f"BENCH_{bench}.json")
+    run = {"bench": bench, "unix_time": round(time.time(), 3),
+           "smoke": smoke(), "records": list(_RECORDS)}
+    with open(path, "a") as f:
+        f.write(json.dumps(run) + "\n")
+    _RECORDS.clear()
+    return path

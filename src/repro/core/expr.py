@@ -42,9 +42,11 @@ from .assoc import Assoc
 DEVICE_NNZ_THRESHOLD = 32768
 
 # Route device matvecs through the Pallas ELL kernel (repro.kernels.spmv)
-# instead of the COO segment reduction.  Off by default: interpret-mode
-# Pallas is for kernel validation, not throughput.
-USE_PALLAS_SPMV = False
+# instead of the COO segment reduction.  The kernel compiles on TPU and
+# falls back to interpret mode elsewhere (see kernels.spmv.spmv_ell);
+# REPRO_USE_PALLAS_SPMV=1 enables it process-wide.
+USE_PALLAS_SPMV = __import__("os").environ.get(
+    "REPRO_USE_PALLAS_SPMV", "0") == "1"
 
 _FUSABLE = frozenset({"logical", "filter", "scale", "shift"})
 _ELEMENTWISE_BIN = frozenset({"add", "sub", "emul"})
@@ -432,6 +434,24 @@ class _Executor:
 
     # -- matmul with optional device lowering ------------------------------
     def _exec_matmul(self, node: LazyAssoc) -> Assoc:
+        # Fused chain lowering: a left-spine matmul chain ending in a
+        # vector (A @ B @ x) runs as successive device spmvs with the
+        # intermediate vector staying on device — no host round-trips
+        # between factors.  Reassociation (A@B)@x → A@(B@x) is licensed
+        # by plus_times semiring algebra (float32 accumulation, same
+        # precision contract as all device lowering).
+        factors = []
+        cur = node
+        while cur.op == "matmul":
+            factors.append(cur.children[1])
+            cur = cur.children[0]
+        factors.append(cur)
+        factors.reverse()               # [A, B, ..., x]
+        if len(factors) >= 3:
+            mats = [self.run(f) for f in factors]
+            out = _device_matmul_chain(mats)
+            if out is not None:
+                return out
         a = self.run(node.children[0])
         b = self.run(node.children[1])
         inner = np.intersect1d(a.col, b.row)
@@ -486,9 +506,10 @@ def _apply_eager(base: Assoc, ops) -> Assoc:
     return out
 
 
-def _device_spmv(asm, x: np.ndarray) -> np.ndarray:
-    """y = A @ x on device; COO segment reduction, or the Pallas ELL
-    kernel when enabled (repro.kernels.spmv — the TPU hot path)."""
+def _device_spmv_dev(asm, x):
+    """y = A @ x on device, device array in/out; COO segment reduction,
+    or the Pallas ELL kernel when enabled (repro.kernels.spmv — the TPU
+    hot path, compiled on TPU / interpreted elsewhere)."""
     import jax.numpy as jnp
     if USE_PALLAS_SPMV:
         from ..kernels import spmv as kspmv
@@ -496,8 +517,47 @@ def _device_spmv(asm, x: np.ndarray) -> np.ndarray:
         k_max = int(max(np.diff(csr.indptr).max(), 1))
         ecols, evals = kspmv.csr_to_ell(csr.indptr, csr.indices, csr.data,
                                         csr.shape[0], k_max)
-        return np.asarray(
-            kspmv.spmv_ell(ecols, evals, jnp.asarray(x, jnp.float32)),
-            dtype=np.float64)
+        return kspmv.spmv_ell(ecols, evals, x.astype(jnp.float32))
     coo = S.coo_from_scipy(asm)
-    return np.asarray(S.spmv(coo, jnp.asarray(x)), dtype=np.float64)
+    return S.spmv(coo, x)
+
+
+def _device_spmv(asm, x: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+    return np.asarray(_device_spmv_dev(asm, jnp.asarray(x, jnp.float32)),
+                      dtype=np.float64)
+
+
+def _device_matmul_chain(mats) -> Optional[Assoc]:
+    """Lower A @ B @ ... @ x to successive device spmvs, keeping the
+    intermediate vector on device between factors.  Returns None when
+    the chain is not eligible (non-vector tail, empty factor, or every
+    factor below DEVICE_NNZ_THRESHOLD) so the caller falls back to
+    pairwise host matmul."""
+    import jax.numpy as jnp
+    *factors, vec = mats
+    if vec.col.shape[0] != 1:
+        return None
+    if any(m.nnz == 0 for m in mats):
+        return None
+    if max(f.nnz for f in factors) < DEVICE_NNZ_THRESHOLD:
+        return None
+    y_keys = vec.row                    # sorted key dictionary
+    y = jnp.asarray(np.asarray(vec._numeric_sm().todense()).ravel(),
+                    jnp.float32)
+    for F in reversed(factors):
+        inner = np.intersect1d(F.col, y_keys)
+        if inner.size == 0:
+            y_keys = F.row
+            y = jnp.zeros(F.row.shape[0], jnp.float32)
+            continue
+        fsm = F._onto(F.row, inner)
+        idx = np.searchsorted(y_keys, inner)    # inner ⊆ y_keys, sorted
+        y = _device_spmv_dev(fsm, jnp.take(y, jnp.asarray(idx)))
+        y_keys = F.row
+    yv = np.asarray(y, dtype=np.float64)        # single host transfer
+    sm = S.scipy_from_triples(
+        np.arange(yv.shape[0]), np.zeros(yv.shape[0], np.int64),
+        yv, (yv.shape[0], 1))
+    sm.eliminate_zeros()
+    return Assoc._from_parts(y_keys, vec.col, None, sm)._compact()

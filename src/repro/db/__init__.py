@@ -4,8 +4,12 @@ Query through :func:`DB` / :class:`DBTable` (tables as associative
 arrays); :class:`EdgeStore` / :class:`MultiInstanceDB` remain the
 storage engines underneath.
 """
-from .binding import DB, AccidentalDenseError, DBTable, bind, put
+from .binding import (DB, DEFAULT_SCAN_TTL, AccidentalDenseError, DBTable,
+                      ScanCache, bind, put)
 from .edgestore import EdgeStore, MultiInstanceDB, Tablet
+from .writer import AsyncWriterError, WriterPool
 
 __all__ = ["DB", "DBTable", "put", "bind", "AccidentalDenseError",
-           "EdgeStore", "MultiInstanceDB", "Tablet"]
+           "EdgeStore", "MultiInstanceDB", "Tablet",
+           "WriterPool", "AsyncWriterError", "ScanCache",
+           "DEFAULT_SCAN_TTL"]

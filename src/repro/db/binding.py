@@ -24,23 +24,34 @@ algebra over table queries build one operator DAG: the planner pushes the
 selection down into the tablet scan and fuses the elementwise stages
 (see ``repro.core.expr``).  ``put`` replaces direct tablet mutation with
 batched writers that keep every :class:`MultiInstanceDB` instance's write
-path busy — the paper's parallel-instance ingest topology.
+path busy — the paper's parallel-instance ingest topology — and with
+``sync=False`` enqueues to the backend's async
+:class:`~repro.db.writer.WriterPool` (writes visible at the next
+``flush()``, which every binding read issues automatically).  Hot scans
+are served from a per-backend :class:`ScanCache` (TTL + write-path
+invalidation); see docs/api.md "Performance".
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Iterable, Optional, Sequence, Union
 
 import numpy as np
 
 from ..core import keys as K
 from ..core.assoc import Assoc
-from ..core.expr import LazyAssoc, _is_all
+from ..core.expr import LazyAssoc, _is_all, _sel_key
 from .edgestore import EdgeStore, MultiInstanceDB
+from .writer import AsyncWriterError, WriterPool
 
 Backend = Union[EdgeStore, MultiInstanceDB]
 
 _KNOWN_TABLES = ("Tedge", "TedgeT", "TedgeDeg")
+
+# Default TTL (seconds) for the binding-layer scan cache; 0 disables.
+DEFAULT_SCAN_TTL = 60.0
 
 
 class AccidentalDenseError(RuntimeError):
@@ -100,6 +111,159 @@ def _classify(sel) -> _Atoms:
 
 
 # ---------------------------------------------------------------------------
+# TTL scan cache — hot column bands served without re-hitting tablets.
+# ---------------------------------------------------------------------------
+
+class ScanCache:
+    """Binding-layer cache of table scans, keyed by the planner's
+    structural scan key (the same identity ``repro.core.expr._skey`` uses
+    for CSE), so a repeated hot band — ``T[:, 'ip.dst|*,']`` issued by
+    every analyst — is served from memory across *separate* expression
+    DAGs, not just within one.
+
+    Coherence comes from two mechanisms:
+
+    * **write-path invalidation** — every ``put`` through the binding (or
+      directly through an attached store) calls :meth:`note_write`; any
+      cached entry whose scanned band intersects the written keys is
+      evicted *before* the mutation lands;
+    * **TTL** — entries expire ``ttl`` seconds after insertion, bounding
+      staleness against writers that bypass the store entirely.
+
+    One cache is shared per backend (all :class:`DBTable` views of a
+    store see the same entries); cached ``Assoc`` results are shared by
+    reference and must be treated as immutable — the same contract the
+    lazy executor's memoization already imposes.
+    """
+
+    def __init__(self, ttl: float = DEFAULT_SCAN_TTL, maxsize: int = 128,
+                 clock=time.monotonic):
+        self.ttl = ttl
+        self.maxsize = maxsize
+        self.clock = clock
+        # skey → (assoc, expiry, axis, atoms); insertion-ordered for
+        # oldest-first eviction when full.
+        self._entries: dict = {}
+        self._lock = threading.RLock()
+        # bumped on every write; admission is gated on it so a scan that
+        # raced a concurrent write cannot re-populate the cache with a
+        # pre-write result (the write's note_write ran before the scan
+        # finished, when the entry wasn't there to evict)
+        self.version = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key) -> Optional[Assoc]:
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is None:
+                self.misses += 1
+                return None
+            assoc, expiry, _, _ = hit
+            if self.clock() > expiry:
+                del self._entries[key]
+                self.evictions += 1
+                self.misses += 1
+                return None
+            self.hits += 1
+            return assoc
+
+    def put(self, key, assoc: Assoc, axis: str, atoms: _Atoms,
+            ttl: Optional[float] = None,
+            if_version: Optional[int] = None) -> None:
+        """Admit a scan result.  ``ttl`` overrides the cache default (the
+        inserting view's knob); ``if_version`` skips admission when any
+        write landed since the caller captured :attr:`version` (i.e. the
+        scan may predate that write)."""
+        ttl = self.ttl if ttl is None else ttl
+        if ttl <= 0:
+            return
+        with self._lock:
+            if if_version is not None and self.version != if_version:
+                return
+            while len(self._entries) >= self.maxsize:
+                self._entries.pop(next(iter(self._entries)))
+                self.evictions += 1
+            self._entries[key] = (assoc, self.clock() + ttl, axis, atoms)
+
+    def note_write(self, rows: np.ndarray, cols: np.ndarray) -> None:
+        """Evict every cached band the written keys touch (called on the
+        write path *before* the mutation is applied/enqueued).  Always
+        bumps :attr:`version`, even with nothing cached — in-flight
+        scans gate their admission on it."""
+        rows = np.asarray(rows, dtype=str)
+        cols = np.asarray(cols, dtype=str)
+        with self._lock:
+            self.version += 1
+            if not self._entries:
+                return
+            doomed = [k for k, (_, _, axis, atoms) in self._entries.items()
+                      if self._touches(axis, atoms, rows, cols)]
+            for k in doomed:
+                del self._entries[k]
+            self.evictions += len(doomed)
+
+    @staticmethod
+    def _touches(axis: str, atoms: _Atoms, rows: np.ndarray,
+                 cols: np.ndarray) -> bool:
+        if axis == "any" or atoms.kind == "all":
+            return True
+        written = rows if axis == "row" else cols
+        if written.shape[0] == 0:
+            return False
+        if atoms.kind == "range":
+            lo, hi = atoms.range
+            return bool(((written >= lo) & (written <= hi)).any())
+        if atoms.keys and bool(
+                np.isin(written, np.asarray(atoms.keys, dtype=str)).any()):
+            return True
+        return any(bool(np.char.startswith(written, p).any())
+                   for p in atoms.prefixes)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __repr__(self) -> str:
+        return (f"ScanCache(ttl={self.ttl:g}s, entries={len(self)}, "
+                f"hits={self.hits}, misses={self.misses})")
+
+
+# Serializes lazy attachment of shared per-backend state (scan cache,
+# writer pool): concurrent pipeline tasks binding the same store must
+# never each create one — the loser's buffered writes would be orphaned.
+_ATTACH_LOCK = threading.Lock()
+
+
+def _cache_for(backend, ttl: Optional[float]) -> Optional[ScanCache]:
+    """One shared ScanCache per backend; on a MultiInstanceDB the same
+    cache is attached to every instance so direct instance writes also
+    invalidate.  ``ttl <= 0`` opts this view out (the backend cache, if
+    any, still sees invalidations via the store-side hook).  The cache's
+    default TTL comes from the first view; each view's own ``cache_ttl``
+    still governs the entries *it* inserts (per-entry TTL)."""
+    if ttl is None:
+        ttl = DEFAULT_SCAN_TTL
+    if ttl <= 0:
+        return None
+    cache = getattr(backend, "_scan_cache", None)
+    if cache is None:
+        with _ATTACH_LOCK:
+            cache = getattr(backend, "_scan_cache", None)
+            if cache is None:
+                cache = ScanCache(ttl=ttl)
+                if isinstance(backend, MultiInstanceDB):
+                    for inst in backend.instances:
+                        inst._scan_cache = cache
+                backend._scan_cache = cache
+    return cache
+
+
+# ---------------------------------------------------------------------------
 # DBTable
 # ---------------------------------------------------------------------------
 
@@ -114,7 +278,8 @@ class DBTable:
 
     def __init__(self, backend: Backend, tables: Sequence[str],
                  name: str = "Tedge",
-                 degree_limit: Optional[float] = None):
+                 degree_limit: Optional[float] = None,
+                 cache_ttl: Optional[float] = None):
         unknown = set(tables) - set(_KNOWN_TABLES)
         if unknown:
             raise ValueError(f"unknown table(s) {sorted(unknown)}; "
@@ -123,11 +288,15 @@ class DBTable:
         self.tables = tuple(tables)
         self.name = name
         self.degree_limit = degree_limit
-        self.stats = {"row": 0, "col": 0, "full": 0, "deg": 0}
+        self.cache_ttl = DEFAULT_SCAN_TTL if cache_ttl is None else cache_ttl
+        self._cache = _cache_for(backend, self.cache_ttl)
+        self.stats = {"row": 0, "col": 0, "full": 0, "deg": 0,
+                      "cache_hit": 0, "cache_miss": 0}
 
     # -- construction-time variants ---------------------------------------
     def with_degree_limit(self, limit: Optional[float]) -> "DBTable":
-        t = DBTable(self.backend, self.tables, self.name, limit)
+        t = DBTable(self.backend, self.tables, self.name, limit,
+                    cache_ttl=self.cache_ttl)
         t.stats = self.stats        # share counters with the parent view
         return t
 
@@ -163,12 +332,14 @@ class DBTable:
     # -- degree table ------------------------------------------------------
     def degree(self, col_key: str) -> float:
         """Point TedgeDeg lookup (the combiner-maintained degree)."""
+        self.flush()
         self.stats["deg"] += 1
         return self.backend.degree(col_key)
 
     def degree_assoc(self, prefix: str = "") -> Assoc:
         """TedgeDeg as an Assoc (keys × 'degree'), optionally restricted
         to a column-key prefix — the power-law analytics input."""
+        self.flush()
         self.stats["deg"] += 1
         items = list(self.backend.degree_items(prefix))
         if not items:
@@ -179,7 +350,7 @@ class DBTable:
 
     # -- ingest ------------------------------------------------------------
     def put(self, A: Union[Assoc, LazyAssoc], file_id: str = "",
-            batch_size: int = 100_000) -> int:
+            batch_size: int = 100_000, sync: bool = True) -> int:
         """Batched triple ingest: Tedge + TedgeT + TedgeDeg in one pass.
 
         Batches model Accumulo's BatchWriter flushes.  On a
@@ -187,26 +358,113 @@ class DBTable:
         instances (independent write paths); passing ``file_id`` instead
         pins the whole put to one instance — the paper's file→instance
         routing used by the pipeline's stage 6.
+
+        With ``sync=False`` batches are *enqueued* to the backend's
+        :class:`~repro.db.writer.WriterPool` (created on first use) and
+        ``put`` returns immediately; writes become visible no later than
+        the next :meth:`flush` — which every scan through the binding
+        issues automatically.  Once a pool exists, synchronous puts also
+        route through it (then flush) so ordering stays single-streamed
+        per instance.
         """
         if isinstance(A, LazyAssoc):
             A = A.eval()
         r, c, v = A.triples()
         v = np.asarray(v).astype(str)
+        pool = getattr(self.backend, "_writer_pool", None)
+        if not sync and pool is None:
+            pool = self.writer()
+        cache = self._cache or getattr(self.backend, "_scan_cache", None)
         dest = self.backend
         if file_id and isinstance(dest, MultiInstanceDB):
             dest = dest.route(file_id)
         n = 0
         for lo in range(0, r.shape[0], batch_size):
             hi = lo + batch_size
-            n += dest.put_triples(r[lo:hi], c[lo:hi], v[lo:hi])
+            rb, cb, vb = r[lo:hi], c[lo:hi], v[lo:hi]
+            if pool is not None:
+                if cache is not None:   # evict at enqueue, before apply
+                    cache.note_write(rb, cb)
+                n += pool.submit(rb, cb, vb, pin=file_id or None)
+            else:                       # store-side hook invalidates
+                n += dest.put_triples(rb, cb, vb)
+        if sync and pool is not None:
+            pool.flush()
         return n
+
+    # -- async writer control ----------------------------------------------
+    def writer(self, **kw) -> WriterPool:
+        """The backend's shared :class:`WriterPool`, created on demand
+        (``kw`` — e.g. ``maxsize``, ``fault_injector`` — applies only at
+        creation).  Creation is serialized: concurrent ingest tasks must
+        share one pool, or the loser's buffered writes would vanish."""
+        pool = getattr(self.backend, "_writer_pool", None)
+        if pool is None:
+            with _ATTACH_LOCK:
+                pool = getattr(self.backend, "_writer_pool", None)
+                if pool is None:
+                    pool = WriterPool(self.backend, **kw)
+                    self.backend._writer_pool = pool
+        return pool
+
+    def flush(self) -> None:
+        """Barrier: block until queued async writes are applied,
+        re-raising any writer error.  No-op without a writer pool."""
+        pool = getattr(self.backend, "_writer_pool", None)
+        if pool is not None:
+            pool.flush()
+
+    def close(self) -> None:
+        """Flush and stop the backend's writer pool (if any)."""
+        pool = getattr(self.backend, "_writer_pool", None)
+        if pool is not None:
+            try:
+                pool.close()
+            finally:
+                self.backend._writer_pool = None
 
     # -- scan execution (called by the LazyAssoc executor) -----------------
     def _scan(self, rsel, csel) -> Assoc:
+        self.flush()                    # async writes become visible here
+        ratoms = catoms = None
+        if not self._is_degree:
+            ratoms, catoms = _classify(rsel), _classify(csel)
+            if ratoms.kind == "all" and catoms.kind != "all":
+                # the degree guard fires before the cache so a guarded
+                # view refuses super-node bands even when they are hot
+                self._degree_guard(catoms)
+        cache = self._cache
+        if cache is None:
+            return self._scan_route(rsel, csel, ratoms, catoms)
+        key = (self.tables, _sel_key(rsel), _sel_key(csel))
+        hit = cache.get(key)
+        if hit is not None:
+            self.stats["cache_hit"] += 1
+            return hit
+        v0 = cache.version          # writes after this gate admission
+        out = self._scan_route(rsel, csel, ratoms, catoms)
+        self.stats["cache_miss"] += 1
+        axis, atoms = self._band(rsel, ratoms, catoms)
+        cache.put(key, out, axis, atoms, ttl=self.cache_ttl, if_version=v0)
+        return out
+
+    def _band(self, rsel, ratoms, catoms) -> tuple:
+        """(axis, atoms) describing which written keys invalidate this
+        scan: degree scans watch column keys (the combiner's inputs),
+        row/col scans watch their scanned axis, full scans watch any."""
+        if self._is_degree:
+            return "col", _classify(rsel)
+        if ratoms.kind != "all":
+            return "row", ratoms
+        if catoms.kind != "all":
+            return "col", catoms
+        return "any", _Atoms("all")
+
+    def _scan_route(self, rsel, csel, ratoms=None, catoms=None) -> Assoc:
         if self._is_degree:
             return self._scan_degree(rsel, csel)
-        ratoms = _classify(rsel)
-        catoms = _classify(csel)
+        if ratoms is None:
+            ratoms, catoms = _classify(rsel), _classify(csel)
 
         if ratoms.kind != "all":
             # row-routed: scan Tedge for the requested rows, refine
@@ -217,7 +475,7 @@ class DBTable:
         if catoms.kind != "all":
             # column-routed: the transpose table turns a column query
             # into a row scan (Accumulo only scans rows efficiently).
-            self._degree_guard(catoms)
+            # (degree guard already applied in _scan)
             self.stats["col"] += 1
             A = self._assemble(self._iter_cells(catoms, transpose=True),
                                transposed=True)
@@ -311,7 +569,8 @@ class DBTable:
 
 def DB(*tables: str, backend: Optional[Backend] = None,
        n_instances: int = 1, tablets_per_instance: int = 4,
-       degree_limit: Optional[float] = None) -> DBTable:
+       degree_limit: Optional[float] = None,
+       cache_ttl: Optional[float] = None) -> DBTable:
     """Bind database tables into one associative-array view (paper §III).
 
     ``DB('Tedge', 'TedgeT')`` enables row *and* column subscripts;
@@ -319,6 +578,8 @@ def DB(*tables: str, backend: Optional[Backend] = None,
     :meth:`DBTable.degree_assoc`; ``DB('TedgeDeg')`` alone views just the
     degree table.  With no ``backend`` a fresh :class:`MultiInstanceDB`
     (or single :class:`EdgeStore` when ``n_instances == 1``) is created.
+    ``cache_ttl`` tunes the scan cache (default ``DEFAULT_SCAN_TTL``;
+    ``0`` opts this view out of cached reads).
     """
     if not tables:
         tables = _KNOWN_TABLES
@@ -328,18 +589,20 @@ def DB(*tables: str, backend: Optional[Backend] = None,
                    MultiInstanceDB(n_instances=n_instances,
                                    tablets_per_instance=tablets_per_instance))
     return DBTable(backend, tables, name=tables[0],
-                   degree_limit=degree_limit)
+                   degree_limit=degree_limit, cache_ttl=cache_ttl)
 
 
-def bind(db, degree_limit: Optional[float] = None) -> DBTable:
+def bind(db, degree_limit: Optional[float] = None,
+         cache_ttl: Optional[float] = None) -> DBTable:
     """Wrap an existing store (or pass a DBTable through) — the adapter
     legacy call sites use to reach the new query surface."""
     if isinstance(db, DBTable):
         return db
-    return DBTable(db, _KNOWN_TABLES, degree_limit=degree_limit)
+    return DBTable(db, _KNOWN_TABLES, degree_limit=degree_limit,
+                   cache_ttl=cache_ttl)
 
 
 def put(T: DBTable, A: Union[Assoc, LazyAssoc], file_id: str = "",
-        batch_size: int = 100_000) -> int:
+        batch_size: int = 100_000, sync: bool = True) -> int:
     """Module-level D4M idiom: ``put(T, putval(E, '1,'))``."""
-    return T.put(A, file_id=file_id, batch_size=batch_size)
+    return T.put(A, file_id=file_id, batch_size=batch_size, sync=sync)

@@ -136,6 +136,9 @@ class EdgeStore:
         """Raw triple mutation batch (the binding layer's batched-writer
         entry point — skips Assoc construction on the write path)."""
         import time
+        cache = getattr(self, "_scan_cache", None)
+        if cache is not None:   # evict cached bands this batch touches
+            cache.note_write(r, c)
         if self.coordination_cost_s:
             time.sleep(self.coordination_cost_s * self.n_tablets / 16.0)
         # Tedge (row-keyed)
@@ -161,6 +164,9 @@ class EdgeStore:
         r, _, v = Edeg.triples()
         keys = np.asarray(r, dtype=str)
         counts = np.asarray(v, dtype=np.float64)
+        cache = getattr(self, "_scan_cache", None)
+        if cache is not None:   # degree bands are keyed by column keys
+            cache.note_write(np.asarray([], dtype=str), keys)
         t_ids = self._route(keys)
         for t in np.unique(t_ids):
             m = t_ids == t

@@ -1,0 +1,237 @@
+"""Async batched writers — the binding layer's parallel ingest path.
+
+The paper's ingest result (§IV-F: 8×16-node instances out-ingest one
+128-node instance) and its follow-ons (arXiv:1907.04217's 1.9B
+updates/sec, arXiv:1902.00846's hierarchical in-memory buffering) all
+rest on one mechanism: **independent write paths kept busy with large
+coalesced batches**.  The synchronous ``DBTable.put`` loop leaves that
+on the table — each batch blocks the caller through every instance's
+coordination stall in turn.
+
+:class:`WriterPool` restores the overlap with a two-tier hierarchy:
+
+* **tier 1 — caller-local buffers**: ``submit`` hash-partitions a triple
+  batch and appends to per-instance buffers (no locks contended, no
+  thread wake-ups on the hot path); a buffer *spills* to its writer
+  queue as one coalesced block once it holds ``spill_rows`` rows;
+* **tier 2 — per-instance writer threads**: one thread per
+  :class:`~repro.db.edgestore.EdgeStore` instance drains its queue,
+  further coalescing everything queued into a single mutation — so the
+  instance's per-batch coordination stall is paid once per drain, not
+  once per submitted batch, and stalls overlap across instances.
+
+Guarantees:
+
+* **per-instance ordering** — buffers, queues, and the single writer
+  thread are all FIFO; row-hash partitioning sends a given row to the
+  same instance every time, so per-key last-write-wins order holds;
+* **bounded memory** — buffers spill at ``spill_rows``; queues have
+  ``maxsize`` (backpressure, not unbounded buffering);
+* **flush barrier** — :meth:`flush` spills every buffer and returns only
+  when every queued block is applied (mutations visible to scans);
+* **error propagation** — a writer-thread failure is recorded and
+  re-raised as :class:`AsyncWriterError` from the next ``submit``,
+  ``flush``, or ``close`` (the writer keeps draining so barriers never
+  hang; the failed block's writes are lost — the caller decides whether
+  to re-put).
+
+Durability contract: an async ``put`` is *applied* no later than the
+next ``flush()`` — the pipeline's stage-6 tasks enqueue and return, and
+the driver's end-of-DAG flush barrier is the commit point (see
+``pipeline/driver.py``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+import numpy as np
+
+from .edgestore import EdgeStore, MultiInstanceDB
+
+_STOP = object()
+
+
+class AsyncWriterError(RuntimeError):
+    """A background writer thread failed; raised at the next barrier."""
+
+
+class _InstanceWriter:
+    """One store's write path: a bounded queue drained by one thread."""
+
+    def __init__(self, store: EdgeStore, maxsize: int, pool: "WriterPool"):
+        self.store = store
+        self.pool = pool
+        self.q: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self.buf: list = []          # tier-1 buffer, guarded by pool lock
+        self.buf_rows = 0
+        self.n_written = 0
+        self.thread = threading.Thread(
+            target=self._loop, name=f"writer/{store.name}", daemon=True)
+        self.thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            # tier-2 coalescing: drain everything queued and apply it as
+            # ONE mutation — one coordination stall per drain, not per
+            # submitted batch.
+            items = [self.q.get()]
+            try:
+                while True:
+                    items.append(self.q.get_nowait())
+            except queue.Empty:
+                pass
+            stop = any(it is _STOP for it in items)
+            batches = [it for it in items if it is not _STOP]
+            try:
+                if batches:
+                    fault = self.pool.fault_injector
+                    if fault is not None:
+                        fault.maybe_kill(f"writer/{self.store.name}")
+                    r = np.concatenate([b[0] for b in batches])
+                    c = np.concatenate([b[1] for b in batches])
+                    v = np.concatenate([b[2] for b in batches])
+                    self.n_written += self.store.put_triples(r, c, v)
+            except BaseException as e:  # noqa: BLE001 — propagate at barrier
+                self.pool._record_error(e)
+            finally:
+                for _ in items:
+                    self.q.task_done()
+            if stop:
+                return
+
+
+class WriterPool:
+    """Background writer pool over an EdgeStore or MultiInstanceDB.
+
+    One writer thread per instance.  ``submit`` partitions a triple batch
+    by row hash across instances (mirroring
+    :meth:`MultiInstanceDB.put_triples`) or pins it to one instance when
+    ``pin`` (a file id) is given — the paper's file→instance routing.
+    """
+
+    def __init__(self, backend, maxsize: int = 32,
+                 spill_rows: int = 25_000, fault_injector=None):
+        if isinstance(backend, MultiInstanceDB):
+            stores = list(backend.instances)
+        elif isinstance(backend, EdgeStore):
+            stores = [backend]
+        else:
+            raise TypeError(f"cannot attach writers to {type(backend)!r}")
+        self.backend = backend
+        self.spill_rows = spill_rows
+        self.fault_injector = fault_injector
+        self._lock = threading.Lock()       # guards tier-1 buffers
+        # errors get their own lock: _spill can block on a full queue
+        # while holding _lock, and the writer thread must still be able
+        # to record a failure (and free a queue slot) without deadlock
+        self._err_lock = threading.Lock()
+        self._errors: list[BaseException] = []
+        self._closed = False
+        self._writers = [_InstanceWriter(s, maxsize, self) for s in stores]
+
+    # -- error plumbing ----------------------------------------------------
+    def _record_error(self, e: BaseException) -> None:
+        with self._err_lock:
+            self._errors.append(e)
+
+    def _check(self) -> None:
+        with self._err_lock:
+            if self._errors:
+                e = self._errors[0]
+                raise AsyncWriterError(
+                    f"{len(self._errors)} async write block(s) failed; "
+                    f"first: {e!r}") from e
+
+    # -- ingest ------------------------------------------------------------
+    def submit(self, r: np.ndarray, c: np.ndarray, v: np.ndarray,
+               pin: Optional[str] = None) -> int:
+        """Buffer a triple batch; spills to the writers once the
+        per-instance buffer reaches ``spill_rows``.  Blocks only on
+        queue backpressure during a spill."""
+        self._check()
+        if self._closed:
+            raise RuntimeError("writer pool is closed")
+        n = int(np.asarray(r).shape[0])
+        if not n:
+            return 0
+        nw = len(self._writers)
+        # partition outside the lock — the O(n) hashing must not
+        # serialize concurrent producers; the lock only covers appends
+        if nw == 1:
+            parts = [(0, (r, c, v), n)]
+        elif pin is not None:
+            parts = [(abs(hash(pin)) % nw, (r, c, v), n)]
+        else:
+            h = np.asarray([abs(hash(k)) for k in r], dtype=np.int64)
+            part = h % nw
+            parts = []
+            for i in np.unique(part):
+                m = part == i
+                parts.append((int(i), (r[m], c[m], v[m]), int(m.sum())))
+        with self._lock:
+            for i, item, ni in parts:
+                self._buffer(self._writers[i], item, ni)
+        return n
+
+    def _buffer(self, w: _InstanceWriter, item, n: int) -> None:
+        """Tier-1 append; spill when full.  Caller holds the lock."""
+        w.buf.append(item)
+        w.buf_rows += n
+        if w.buf_rows >= self.spill_rows:
+            self._spill(w)
+
+    def _spill(self, w: _InstanceWriter) -> None:
+        if not w.buf:
+            return
+        if len(w.buf) == 1:
+            block = w.buf[0]
+        else:
+            block = tuple(np.concatenate([b[i] for b in w.buf])
+                          for i in range(3))
+        w.buf = []
+        w.buf_rows = 0
+        w.q.put(block)
+
+    # -- barriers ----------------------------------------------------------
+    def flush(self) -> None:
+        """Spill all buffers, then block until every queued block is
+        applied; re-raise writer errors.  After ``flush`` returns
+        cleanly, all prior ``submit``\\ s are visible to scans."""
+        with self._lock:
+            for w in self._writers:
+                self._spill(w)
+        for w in self._writers:
+            w.q.join()
+        self._check()
+
+    def close(self) -> None:
+        """Flush, stop the writer threads, and re-raise pending errors."""
+        if self._closed:
+            self._check()
+            return
+        self._closed = True
+        with self._lock:
+            for w in self._writers:
+                self._spill(w)
+        for w in self._writers:
+            w.q.put(_STOP)
+        for w in self._writers:
+            w.thread.join()
+        self._check()
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Rows buffered plus blocks enqueued but not yet applied."""
+        return (sum(w.buf_rows for w in self._writers)
+                + sum(w.q.unfinished_tasks for w in self._writers))
+
+    @property
+    def n_written(self) -> int:
+        return sum(w.n_written for w in self._writers)
+
+    def __repr__(self) -> str:
+        return (f"WriterPool({len(self._writers)} writer(s), "
+                f"pending={self.pending}, written={self.n_written})")

@@ -18,7 +18,11 @@ def spmv_ell_ref(ecols: jax.Array, evals: jax.Array, x: jax.Array,
     if ring == "plus_times":
         return jnp.sum(prods, axis=1)
     if ring == "max_times":
-        return jnp.max(jnp.maximum(prods, 0.0), axis=1)
+        # padding excluded via the -inf identity (a 0 floor would clamp
+        # negative products); rows with no entries resolve to 0
+        masked = jnp.where(ecols >= 0, prods, -jnp.inf)
+        out = jnp.max(masked, axis=1)
+        return jnp.where(jnp.isneginf(out), 0.0, out)
     raise ValueError(ring)
 
 

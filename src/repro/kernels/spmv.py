@@ -9,14 +9,23 @@ kernel is dense systolic work:
     y[r] ⊕= Σ_k vals[r,k] ⊗ (onehot(cols[r,k]) @ x_tile)
 
 Grid: (row blocks, col tiles); col-tile dimension is sequential so the
-VMEM accumulator is race-free.  plus_times and max_times semirings.
+VMEM accumulator is race-free.  plus_times and max_times semirings; for
+max_times the accumulator starts at -inf and padding slots are masked,
+so signed products reduce correctly (empty rows resolve to 0, the
+sparse no-entry convention).
+
+``interpret`` auto-selects by backend: compiled on TPU, interpreter
+everywhere else (the kernel targets Mosaic; CPU/GPU runs validate
+semantics, TPU runs take the MXU path).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -28,8 +37,9 @@ def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, out_ref, *,
     def _init():
         if ring == "plus_times":
             out_ref[...] = jnp.zeros_like(out_ref)
-        else:
-            out_ref[...] = jnp.full_like(out_ref, 0.0)
+        else:                    # max_times identity is -inf, not 0 —
+            # a 0 floor would silently clamp negative products
+            out_ref[...] = jnp.full_like(out_ref, -jnp.inf)
 
     cols = cols_ref[...]                         # (BR, Kmax) int32
     vals = vals_ref[...].astype(jnp.float32)     # (BR, Kmax)
@@ -46,25 +56,35 @@ def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, out_ref, *,
         if ring == "plus_times":
             acc = acc + vals[:, k] * gathered
         else:                        # max_times
+            # padding cols are -1, so local < 0 on every tile — the
+            # mask excludes both padding and out-of-tile slots
             hit = (local[:, k] >= 0) & (local[:, k] < block_cols)
-            acc = jnp.maximum(acc, jnp.where(hit, vals[:, k] * gathered,
-                                             acc))
+            acc = jnp.where(hit, jnp.maximum(acc, vals[:, k] * gathered),
+                            acc)
+    if ring != "plus_times":
+        # last col tile: rows with no entries anywhere stay at the
+        # -inf identity — resolve them to 0 (sparse no-entry value)
+        is_last = ct == pl.num_programs(1) - 1
+        acc = jnp.where(is_last & jnp.isneginf(acc), 0.0, acc)
     out_ref[...] = acc
 
 
 def csr_to_ell(row_ptr, cols, vals, n_rows: int, k_max: int):
-    """Host-side CSR→ELL pack (pad/truncate to k_max nnz per row)."""
-    import numpy as np
-    row_ptr = np.asarray(row_ptr)
+    """Host-side CSR→ELL pack (pad/truncate to k_max nnz per row) —
+    fully vectorized scatter, no Python row loop."""
+    row_ptr = np.asarray(row_ptr, dtype=np.int64)
     cols = np.asarray(cols)
     vals = np.asarray(vals)
     ecols = np.full((n_rows, k_max), -1, np.int32)
     evals = np.zeros((n_rows, k_max), np.float32)
-    for r in range(n_rows):
-        lo, hi = row_ptr[r], min(row_ptr[r + 1], row_ptr[r] + k_max)
-        n = hi - lo
-        ecols[r, :n] = cols[lo:hi]
-        evals[r, :n] = vals[lo:hi]
+    keep = np.minimum(np.diff(row_ptr), k_max)
+    total = int(keep.sum())
+    if total:
+        rows = np.repeat(np.arange(n_rows), keep)
+        offs = np.arange(total) - np.repeat(np.cumsum(keep) - keep, keep)
+        src = np.repeat(row_ptr[:-1], keep) + offs
+        ecols[rows, offs] = cols[src]
+        evals[rows, offs] = vals[src]
     return jnp.asarray(ecols), jnp.asarray(evals)
 
 
@@ -72,8 +92,15 @@ def csr_to_ell(row_ptr, cols, vals, n_rows: int, k_max: int):
                                              "ring", "interpret"))
 def spmv_ell(ecols: jax.Array, evals: jax.Array, x: jax.Array,
              block_rows: int = 256, block_cols: int = 1024,
-             ring: str = "plus_times", interpret: bool = True) -> jax.Array:
-    """y = A ⊕.⊗ x with A in ELL (n_rows, k_max)."""
+             ring: str = "plus_times",
+             interpret: Optional[bool] = None) -> jax.Array:
+    """y = A ⊕.⊗ x with A in ELL (n_rows, k_max).
+
+    ``interpret=None`` (default) compiles on TPU and interprets on other
+    backends; pass an explicit bool to force either mode.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n_rows, _ = ecols.shape
     n_cols = x.shape[0]
     rpad = (-n_rows) % block_rows

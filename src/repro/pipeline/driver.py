@@ -110,6 +110,19 @@ def build_tasks(cfg: PipelineConfig, db) -> List[Task]:
                 deps=(sps_id,), stage="ingest"))
         chain()
 
+    # flush barrier: ingest tasks only *enqueue* writes (async writer
+    # pool); this task is the commit point where all queued mutations
+    # are applied — and where any writer error surfaces.
+    flush_id = "flush/writers"
+
+    def flush_writers():
+        from ..db.binding import bind
+        bind(db).flush()
+        return stages.StageResult([], 0, 0)
+
+    tasks.append(Task(flush_id, record(flush_id)(flush_writers),
+                      deps=("*",), stage="flush"))
+
     # expose per-task results on the task list for the driver to collect
     build_tasks.results = results  # type: ignore[attr-defined]
     return tasks
@@ -123,6 +136,12 @@ def run_pipeline(cfg: PipelineConfig, db,
     runner = Runner(n_workers=n_workers or cfg.n_workers,
                     journal_path=journal, fault_injector=fault_injector)
     runner.run(tasks)
+    # the flush barrier task is journaled like any other; on a partial
+    # restart it may be skipped while fresh ingest tasks enqueued new
+    # writes — flush again here so run_pipeline never returns with
+    # queued mutations
+    from ..db.binding import bind
+    bind(db).flush()
     results = build_tasks.results  # type: ignore[attr-defined]
     per_stage: Dict[str, dict] = {}
     for tid, res in results.items():

@@ -35,7 +35,7 @@ import numpy as np
 class Task:
     task_id: str
     fn: Callable[[], object]          # idempotent
-    deps: tuple = ()
+    deps: tuple = ()                  # "*" = every non-barrier task
     stage: str = ""                   # for per-stage stats
 
 
@@ -131,6 +131,16 @@ class Runner:
 
     # -- core loop ------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> Dict[str, TaskRecord]:
+        # Barrier tasks: deps containing "*" expand to every non-barrier
+        # task — the driver uses this for the end-of-DAG writer flush
+        # (async ingest's commit point).
+        plain_ids = tuple(t.task_id for t in tasks if "*" not in t.deps)
+        tasks = [
+            dataclasses.replace(
+                t, deps=tuple(d for d in t.deps if d != "*")
+                + tuple(i for i in plain_ids if i != t.task_id))
+            if "*" in t.deps else t
+            for t in tasks]
         by_id = {t.task_id: t for t in tasks}
         pending = {t.task_id for t in tasks
                    if t.task_id not in self.journal.done}

@@ -157,5 +157,8 @@ def ingest(src: str, db) -> StageResult:
     # writers, file→instance routing on multi-instance backends.
     # paper: Edeg = putCol(sum(E.',2),'degree,'); put(TedgeDeg, num2str(Edeg))
     # (the store's sum combiner maintains TedgeDeg during the same put)
-    n = put(bind(db), E.putval("1,"), file_id=src)
+    # sync=False: batches enqueue to the backend's writer pool so tablet
+    # mutation overlaps the runner's parse/sort tasks; the driver's
+    # end-of-DAG flush barrier is the commit point.
+    n = put(bind(db), E.putval("1,"), file_id=src, sync=False)
     return StageResult([], os.path.getsize(src), n)

@@ -234,6 +234,48 @@ class TestLazyEagerEquivalence:
                      np.ones(12))
         assert assoc_close(A * ones, lazy(A) * lazy(ones), tol=1e-4)
 
+    def test_fused_matmul_chain_matches_eager(self, monkeypatch):
+        """A @ B @ x lowers to successive device spmvs (the intermediate
+        vector never leaves the device); result must match the eager
+        left-associated host chain."""
+        monkeypatch.setattr(X, "DEVICE_NNZ_THRESHOLD", 1)
+        rng = np.random.default_rng(5)
+        A = rand_assoc(rng, nr=12, nc=12, nnz=60)
+        B = rand_assoc(rng, nr=12, nc=12, nnz=60)
+        x = Assoc([f"c{j:02d}" for j in range(12)], ["total"] * 12,
+                  np.ones(12))
+        eager = (A * B) * x
+        lz = (lazy(A) * lazy(B)) * lazy(x)
+        assert assoc_close(eager, lz, tol=1e-3)
+
+    def test_fused_matmul_chain_pallas_path(self, monkeypatch):
+        monkeypatch.setattr(X, "DEVICE_NNZ_THRESHOLD", 1)
+        monkeypatch.setattr(X, "USE_PALLAS_SPMV", True)
+        rng = np.random.default_rng(6)
+        A = rand_assoc(rng, nr=10, nc=10, nnz=40)
+        B = rand_assoc(rng, nr=10, nc=10, nnz=40)
+        x = Assoc([f"c{j:02d}" for j in range(10)], ["total"] * 10,
+                  np.ones(10))
+        eager = (A * B) * x
+        lz = (lazy(A) * lazy(B)) * lazy(x)
+        assert assoc_close(eager, lz, tol=1e-3)
+
+    def test_long_chain_and_nonvector_fallback(self, monkeypatch):
+        monkeypatch.setattr(X, "DEVICE_NNZ_THRESHOLD", 1)
+        rng = np.random.default_rng(7)
+        A = rand_assoc(rng, nr=9, nc=9, nnz=40)
+        B = rand_assoc(rng, nr=9, nc=9, nnz=40)
+        C = rand_assoc(rng, nr=9, nc=9, nnz=40)
+        x = Assoc([f"c{j:02d}" for j in range(9)], ["total"] * 9,
+                  np.ones(9))
+        # four-factor chain ending in a vector
+        assert assoc_close(((A * B) * C) * x,
+                           ((lazy(A) * lazy(B)) * lazy(C)) * lazy(x),
+                           tol=1e-3)
+        # matrix-valued chain falls back to pairwise host matmul
+        assert assoc_close((A * B) * C,
+                           (lazy(A) * lazy(B)) * lazy(C), tol=1e-3)
+
     def test_categorical_filter_keeps_eager_semantics(self):
         A = Assoc("r1,r2,r3,", "c,c,c,", "beta,alpha,gamma,", agg="min")
         assert assoc_close(A > "alpha", lazy(A) > "alpha")

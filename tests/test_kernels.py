@@ -74,6 +74,59 @@ class TestSpmvEll:
         assert ecols.shape == (3, 3)
         np.testing.assert_allclose(np.asarray(evals[1]), 0.0)
 
+    def test_csr_to_ell_matches_row_loop(self):
+        """The vectorized pack must equal the per-row reference,
+        including k_max truncation and empty rows."""
+        rng = np.random.default_rng(7)
+        n_rows, n_cols, k_max = 50, 80, 4
+        counts = rng.integers(0, 9, n_rows)     # some rows exceed k_max
+        row_ptr = np.concatenate([[0], np.cumsum(counts)])
+        nnz = int(row_ptr[-1])
+        cols = rng.integers(0, n_cols, nnz)
+        vals = rng.normal(0, 1, nnz)
+        ecols, evals = csr_to_ell(row_ptr, cols, vals, n_rows, k_max)
+        ref_c = np.full((n_rows, k_max), -1, np.int32)
+        ref_v = np.zeros((n_rows, k_max), np.float32)
+        for r in range(n_rows):
+            lo = row_ptr[r]
+            hi = min(row_ptr[r + 1], lo + k_max)
+            ref_c[r, :hi - lo] = cols[lo:hi]
+            ref_v[r, :hi - lo] = vals[lo:hi]
+        np.testing.assert_array_equal(np.asarray(ecols), ref_c)
+        np.testing.assert_allclose(np.asarray(evals), ref_v, rtol=1e-6)
+
+    @pytest.mark.parametrize("br,bc", [(32, 64), (8, 16)])
+    def test_max_times_signed(self, br, bc):
+        """max_times over signed values: a zero-initialized accumulator
+        would clamp all-negative rows to 0 — the semiring identity is
+        -inf (empty rows resolve to the sparse no-entry value 0)."""
+        rng = np.random.default_rng(11)
+        R, C, K = 40, 96, 3
+        ecols = np.asarray(rng.integers(0, C, (R, K)), np.int32)
+        ecols[rng.random((R, K)) < 0.3] = -1     # padding slots
+        ecols[5] = -1                            # an entirely empty row
+        evals = rng.normal(0, 1, (R, K)).astype(np.float32)
+        evals[3] = -np.abs(evals[3]) - 0.5       # an all-negative row
+        evals[ecols == -1] = 0.0
+        x = jnp.asarray(np.abs(rng.normal(0, 1, C)).astype(np.float32) + 0.1)
+        ecols_j, evals_j = jnp.asarray(ecols), jnp.asarray(evals)
+        out = np.asarray(spmv_ell(ecols_j, evals_j, x, block_rows=br,
+                                  block_cols=bc, ring="max_times"))
+        expect = np.zeros(R, np.float32)
+        xs = np.asarray(x)
+        for r in range(R):
+            prods = [evals[r, k] * xs[ecols[r, k]]
+                     for k in range(K) if ecols[r, k] >= 0]
+            expect[r] = max(prods) if prods else 0.0
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+        assert expect[3] < 0 and out[3] < 0      # negatives not clamped
+        assert out[5] == 0.0                     # empty row → 0
+        # the jnp oracle agrees with the kernel
+        np.testing.assert_allclose(
+            np.asarray(ref.spmv_ell_ref(ecols_j, evals_j, x,
+                                        ring="max_times")),
+            expect, rtol=1e-4, atol=1e-4)
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("S,H,KV,Dh,bq,bk", [
