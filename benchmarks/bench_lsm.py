@@ -1,0 +1,112 @@
+"""Persistent LSM backend vs the in-memory store: ingest rate, column
+queries, and reopen/recovery timing.
+
+The LSM engine (``repro.db.lsmstore``) pays WAL appends + memtable
+maintenance on the write path and run merges on the read path in
+exchange for durability — this benchmark quantifies the exchange rate
+against the volatile ``EdgeStore`` topology on identical workloads:
+
+* **ingest** — async binding ``put`` (writer pool, flush barrier as the
+  fsync commit point) into memory vs LSM, entries/sec;
+* **column query** — the Fig. 2 hot band (``T[:, 'ip.dst|*,']``,
+  uncached) served from tablets vs memtable + sorted runs;
+* **recovery** — reopen timing: WAL replay (kill before spill) and
+  run-indexed open (after spill + compaction), plus a correctness check
+  that the recovered store matches the memory run's entry count and
+  degree sums exactly.
+
+Emits a JSON trajectory to ``BENCH_lsm.json`` (CI smoke-runs this in a
+tmpdir with BENCH_SMOKE=1).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from repro.db import DB, LSMStore
+
+from .bench_ingest import make_batches
+from .common import emit, smoke, timeit, write_trajectory
+
+
+def fresh_lsm_table(path: str, n_instances: int):
+    shutil.rmtree(path, ignore_errors=True)
+    return DB("Tedge", "TedgeT", "TedgeDeg", backend="lsm", path=path,
+              n_instances=n_instances, cache_ttl=0)
+
+
+def main() -> None:
+    n_batches, rows_per = (8, 200) if smoke() else (16, 400)
+    n_instances = 2
+    batches = make_batches(n_batches, rows_per)
+    n_entries = sum(b.nnz for b in batches)
+    root = tempfile.mkdtemp(prefix="bench_lsm_")
+
+    def ingest(T):
+        for b in batches:
+            T.put(b, sync=False)
+        T.flush()
+        T.close()
+        return T
+
+    # -- ingest: memory vs LSM (same async write path, same topology) ------
+    def mem_ingest():
+        return ingest(DB("Tedge", "TedgeT", "TedgeDeg",
+                         n_instances=n_instances, tablets_per_instance=4,
+                         cache_ttl=0))
+
+    def lsm_ingest():
+        return ingest(fresh_lsm_table(f"{root}/ingest", n_instances))
+
+    t_mem = timeit(mem_ingest, repeat=3)
+    t_lsm = timeit(lsm_ingest, repeat=3)
+    emit("lsm_ingest_memory_baseline", t_mem * 1e6,
+         f"rate={n_entries / t_mem:.0f}_entries_per_s",
+         entries_per_s=n_entries / t_mem)
+    emit("lsm_ingest_wal_fsync", t_lsm * 1e6,
+         f"rate={n_entries / t_lsm:.0f}_entries_per_s;"
+         f"vs_memory={t_lsm / t_mem:.2f}x_cost",
+         entries_per_s=n_entries / t_lsm, cost_vs_memory=t_lsm / t_mem)
+
+    # -- column query: the Fig. 2 hot band, uncached -----------------------
+    Tm = mem_ingest()
+    Tl = ingest(fresh_lsm_table(f"{root}/query", n_instances))
+    assert Tm.n_entries == Tl.n_entries, \
+        f"LSM dropped entries: {Tl.n_entries} != {Tm.n_entries}"
+    q_mem = timeit(lambda: Tm[:, "ip.dst|*,"].eval(), repeat=3)
+    q_lsm = timeit(lambda: Tl[:, "ip.dst|*,"].eval(), repeat=3)
+    nnz = Tm[:, "ip.dst|*,"].eval().nnz
+    assert Tl[:, "ip.dst|*,"].eval().nnz == nnz
+    emit("lsm_colquery_memory_baseline", q_mem * 1e6, f"nnz={nnz}")
+    emit("lsm_colquery_sorted_runs", q_lsm * 1e6,
+         f"nnz={nnz};vs_memory={q_lsm / q_mem:.2f}x_cost",
+         cost_vs_memory=q_lsm / q_mem)
+
+    # -- recovery: reopen from WAL vs from compacted runs ------------------
+    deg_key = str(Tm.degree_assoc("ip.dst|").triples()[0][0])
+    expect_deg = Tm.degree(deg_key)
+    path = f"{root}/query/db0"
+    t_wal = timeit(lambda: LSMStore(path).close(), repeat=3)
+    emit("lsm_reopen_wal_replay", t_wal * 1e6,
+         f"entries={LSMStore(path).n_entries}")
+    s = LSMStore(path)
+    s.spill()
+    s.compact()
+    s.close()
+    t_runs = timeit(lambda: LSMStore(path).close(), repeat=3)
+    emit("lsm_reopen_compacted_runs", t_runs * 1e6,
+         f"vs_wal={t_runs / max(t_wal, 1e-12):.2f}x")
+
+    # recovered store == memory run (count + degree sums)
+    Tr = DB("Tedge", "TedgeT", "TedgeDeg", backend="lsm",
+            path=f"{root}/query", n_instances=n_instances, cache_ttl=0)
+    assert Tr.n_entries == Tm.n_entries
+    assert Tr.degree(deg_key) == expect_deg, \
+        f"degree drift after recovery: {Tr.degree(deg_key)} != {expect_deg}"
+
+    shutil.rmtree(root, ignore_errors=True)
+    write_trajectory("lsm")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ docstring for the paper artifact it reproduces):
 * bench_expansion        — §IV-A/C/D (per-stage data expansion)
 * bench_loc              — §IV-G (135-line user pipeline claim)
 * bench_query            — Fig. 2 (connection queries)
+* bench_lsm              — persistent LSM backend vs memory (+ recovery)
 * bench_analytics        — §III-A (device-side graph algebra)
 * bench_kernels          — Pallas kernels vs oracles
 """
@@ -18,11 +19,11 @@ import traceback
 
 def main() -> None:
     from . import (bench_analytics, bench_expansion, bench_ingest,
-                   bench_kernels, bench_loc, bench_pipeline_scaling,
-                   bench_query, bench_serving)
+                   bench_kernels, bench_loc, bench_lsm,
+                   bench_pipeline_scaling, bench_query, bench_serving)
     print("name,us_per_call,derived")
     for mod in (bench_loc, bench_expansion, bench_query, bench_ingest,
-                bench_analytics, bench_kernels, bench_serving,
+                bench_lsm, bench_analytics, bench_kernels, bench_serving,
                 bench_pipeline_scaling):
         try:
             mod.main()

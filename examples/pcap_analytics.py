@@ -9,6 +9,13 @@ table (TedgeDeg), and chained algebra over table queries builds a lazy
 operator DAG that executes in one fused pass.
 
 Run:  PYTHONPATH=src python examples/pcap_analytics.py
+      PYTHONPATH=src python examples/pcap_analytics.py lsm /tmp/pcap_lsm
+
+The optional arguments pick the storage engine from the backend
+registry: ``memory`` (default, volatile) or ``lsm <path>`` — the
+persistent store, where a re-run against the same path reopens the
+previous window from disk (WAL replay + sorted runs) instead of
+re-ingesting.
 """
 import os
 import sys
@@ -23,15 +30,25 @@ from repro.db import DB, put
 from repro.pipeline import TrafficConfig, botnet_truth
 from repro.pipeline.pcap import records_to_tsv, synth_packets
 
+backend = sys.argv[1] if len(sys.argv) > 1 else "memory"
+path = sys.argv[2] if len(sys.argv) > 2 else (
+    os.path.join("/tmp", "pcap_analytics_lsm") if backend == "lsm" else None)
+
 # --- capture a window and ingest it ----------------------------------------
 traffic = TrafficConfig(n_hosts=512, pkt_rate=400.0, n_bots=16,
                         beacon_period_s=4.0, seed=7)
-rec = synth_packets(traffic, 60.0)
-E = val2col(parse_tsv(records_to_tsv(rec)))
 
-T = DB('Tedge', 'TedgeT', 'TedgeDeg', n_instances=2, tablets_per_instance=4)
-put(T, E.putval("1,"))
-del E  # everything below reads back through the binding
+T = DB('Tedge', 'TedgeT', 'TedgeDeg', backend=backend, path=path,
+       n_instances=2, tablets_per_instance=4)
+if T.n_entries:
+    print(f"[{backend}] reopened existing store at {path} "
+          f"({T.n_entries} entries recovered — skipping ingest)")
+else:
+    rec = synth_packets(traffic, 60.0)
+    E = val2col(parse_tsv(records_to_tsv(rec)))
+    put(T, E.putval("1,"))
+    T.flush()   # durable backends fsync here (the commit point)
+    del E  # everything below reads back through the binding
 
 window = T[:, :].eval()
 print(f"window: {window.shape[0]} packets, {window.shape[1]} field|values "

@@ -1,15 +1,21 @@
 """repro.db — the Accumulo-analog edge store and its D4M binding.
 
 Query through :func:`DB` / :class:`DBTable` (tables as associative
-arrays); :class:`EdgeStore` / :class:`MultiInstanceDB` remain the
-storage engines underneath.
+arrays); storage engines live behind the backend registry:
+``backend="memory"`` (:class:`EdgeStore` / :class:`MultiInstanceDB`)
+or ``backend="lsm"`` (:class:`LSMStore` / :class:`LSMMultiInstanceDB`,
+the durable WAL + sorted-runs store).
 """
-from .binding import (DB, DEFAULT_SCAN_TTL, AccidentalDenseError, DBTable,
-                      ScanCache, bind, put)
+from .binding import (DB, DEFAULT_FULL_SCAN_WPS_LIMIT, DEFAULT_SCAN_TTL,
+                      AccidentalDenseError, DBTable, ScanCache, bind, put)
 from .edgestore import EdgeStore, MultiInstanceDB, Tablet
+from .lsmstore import LSMMultiInstanceDB, LSMStore, SSTable
+from .registry import BACKENDS, make_backend, register_backend
 from .writer import AsyncWriterError, WriterPool
 
 __all__ = ["DB", "DBTable", "put", "bind", "AccidentalDenseError",
            "EdgeStore", "MultiInstanceDB", "Tablet",
+           "LSMStore", "LSMMultiInstanceDB", "SSTable",
+           "BACKENDS", "register_backend", "make_backend",
            "WriterPool", "AsyncWriterError", "ScanCache",
-           "DEFAULT_SCAN_TTL"]
+           "DEFAULT_SCAN_TTL", "DEFAULT_FULL_SCAN_WPS_LIMIT"]

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import deque
 from typing import Iterable, Optional, Sequence, Union
 
 import numpy as np
@@ -44,14 +45,20 @@ from ..core import keys as K
 from ..core.assoc import Assoc
 from ..core.expr import LazyAssoc, _is_all, _sel_key
 from .edgestore import EdgeStore, MultiInstanceDB
+from .lsmstore import LSMMultiInstanceDB, LSMStore
+from .registry import make_backend
 from .writer import AsyncWriterError, WriterPool
 
-Backend = Union[EdgeStore, MultiInstanceDB]
+Backend = Union[EdgeStore, MultiInstanceDB, LSMStore, LSMMultiInstanceDB]
 
 _KNOWN_TABLES = ("Tedge", "TedgeT", "TedgeDeg")
 
 # Default TTL (seconds) for the binding-layer scan cache; 0 disables.
 DEFAULT_SCAN_TTL = 60.0
+
+# Default writes/sec above which full-table ('any'-band) scan results are
+# not admitted to the cache — they are evicted by any write and churn.
+DEFAULT_FULL_SCAN_WPS_LIMIT = 50.0
 
 
 class AccidentalDenseError(RuntimeError):
@@ -137,10 +144,21 @@ class ScanCache:
     """
 
     def __init__(self, ttl: float = DEFAULT_SCAN_TTL, maxsize: int = 128,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 full_scan_wps_limit: float = DEFAULT_FULL_SCAN_WPS_LIMIT,
+                 wps_window: float = 10.0):
         self.ttl = ttl
         self.maxsize = maxsize
         self.clock = clock
+        # admission policy for 'any'-band (full-table) entries: they are
+        # evicted by *any* write, so on a write-heavy backend caching
+        # them is pure churn.  When the observed write rate exceeds
+        # ``full_scan_wps_limit`` writes/s (over ``wps_window`` seconds),
+        # full-table scans are not admitted.
+        self.full_scan_wps_limit = full_scan_wps_limit
+        self.wps_window = wps_window
+        self._write_times: deque = deque(maxlen=1024)
+        self.admission_skips = 0
         # skey → (assoc, expiry, axis, atoms); insertion-ordered for
         # oldest-first eviction when full.
         self._entries: dict = {}
@@ -182,6 +200,10 @@ class ScanCache:
         with self._lock:
             if if_version is not None and self.version != if_version:
                 return
+            if axis == "any" and \
+                    self._writes_per_s_locked() > self.full_scan_wps_limit:
+                self.admission_skips += 1
+                return
             while len(self._entries) >= self.maxsize:
                 self._entries.pop(next(iter(self._entries)))
                 self.evictions += 1
@@ -196,6 +218,7 @@ class ScanCache:
         cols = np.asarray(cols, dtype=str)
         with self._lock:
             self.version += 1
+            self._write_times.append(self.clock())
             if not self._entries:
                 return
             doomed = [k for k, (_, _, axis, atoms) in self._entries.items()
@@ -220,6 +243,25 @@ class ScanCache:
             return True
         return any(bool(np.char.startswith(written, p).any())
                    for p in atoms.prefixes)
+
+    def _writes_per_s_locked(self) -> float:
+        """Write rate over the trailing ``wps_window`` seconds.  When
+        the sample deque is saturated (its maxlen evicted timestamps
+        still inside the window), rate over the *retained* span — the
+        bounded buffer must not cap the estimate at maxlen/window."""
+        now = self.clock()
+        cutoff = now - self.wps_window
+        while self._write_times and self._write_times[0] < cutoff:
+            self._write_times.popleft()
+        n = len(self._write_times)
+        if n and n == self._write_times.maxlen:
+            return n / max(now - self._write_times[0], 1e-9)
+        return n / self.wps_window
+
+    @property
+    def writes_per_s(self) -> float:
+        with self._lock:
+            return self._writes_per_s_locked()
 
     def clear(self) -> None:
         with self._lock:
@@ -409,19 +451,32 @@ class DBTable:
 
     def flush(self) -> None:
         """Barrier: block until queued async writes are applied,
-        re-raising any writer error.  No-op without a writer pool."""
+        re-raising any writer error — and, on durable backends, fsync
+        the WAL (the commit point; see docs/api.md "Backends").  On a
+        synced, empty pool this is cheap (the store's dirty flag gates
+        the fsync)."""
         pool = getattr(self.backend, "_writer_pool", None)
         if pool is not None:
-            pool.flush()
+            pool.flush()            # drains, then syncs the backend
+        else:
+            sync = getattr(self.backend, "sync", None)
+            if sync is not None:
+                sync()              # sync puts still commit at the barrier
 
     def close(self) -> None:
-        """Flush and stop the backend's writer pool (if any)."""
+        """Flush and stop the backend's writer pool (if any); on a
+        durable backend with no pool, still fsync — close is a commit
+        point either way."""
         pool = getattr(self.backend, "_writer_pool", None)
         if pool is not None:
             try:
-                pool.close()
+                pool.close()            # drains, then syncs the backend
             finally:
                 self.backend._writer_pool = None
+        else:
+            sync = getattr(self.backend, "sync", None)
+            if sync is not None:
+                sync()
 
     # -- scan execution (called by the LazyAssoc executor) -----------------
     def _scan(self, rsel, csel) -> Assoc:
@@ -567,27 +622,38 @@ class DBTable:
 # Entry points.
 # ---------------------------------------------------------------------------
 
-def DB(*tables: str, backend: Optional[Backend] = None,
+def DB(*tables: str, backend: Union[Backend, str, None] = None,
        n_instances: int = 1, tablets_per_instance: int = 4,
        degree_limit: Optional[float] = None,
-       cache_ttl: Optional[float] = None) -> DBTable:
+       cache_ttl: Optional[float] = None,
+       path: Optional[str] = None, **backend_options) -> DBTable:
     """Bind database tables into one associative-array view (paper §III).
 
     ``DB('Tedge', 'TedgeT')`` enables row *and* column subscripts;
     adding ``'TedgeDeg'`` wires in the degree guard and
     :meth:`DBTable.degree_assoc`; ``DB('TedgeDeg')`` alone views just the
-    degree table.  With no ``backend`` a fresh :class:`MultiInstanceDB`
-    (or single :class:`EdgeStore` when ``n_instances == 1``) is created.
-    ``cache_ttl`` tunes the scan cache (default ``DEFAULT_SCAN_TTL``;
-    ``0`` opts this view out of cached reads).
+    degree table.
+
+    ``backend`` selects the storage engine: an existing store object, or
+    a registered name — ``"memory"`` (the default: a fresh
+    :class:`MultiInstanceDB`, or single :class:`EdgeStore` when
+    ``n_instances == 1``) or ``"lsm"`` (the persistent
+    :class:`~repro.db.lsmstore.LSMStore`, which requires ``path=`` and
+    shards instances across ``path/db*`` subdirectories when
+    ``n_instances > 1``).  Extra ``backend_options`` (e.g.
+    ``memtable_limit``, ``coordination_cost_s``) pass to the engine
+    factory; see ``repro.db.registry``.  ``cache_ttl`` tunes the scan
+    cache (default ``DEFAULT_SCAN_TTL``; ``0`` opts this view out of
+    cached reads).
     """
     if not tables:
         tables = _KNOWN_TABLES
-    if backend is None:
-        backend = (EdgeStore(n_tablets=tablets_per_instance)
-                   if n_instances == 1 else
-                   MultiInstanceDB(n_instances=n_instances,
-                                   tablets_per_instance=tablets_per_instance))
+    if backend is None or isinstance(backend, str):
+        backend = make_backend(
+            backend if isinstance(backend, str) else "memory",
+            n_instances=n_instances,
+            tablets_per_instance=tablets_per_instance,
+            path=path, **backend_options)
     return DBTable(backend, tables, name=tables[0],
                    degree_limit=degree_limit, cache_ttl=cache_ttl)
 

@@ -37,6 +37,24 @@ import numpy as np
 from ..core.assoc import Assoc
 
 
+def connections_query(store, ip: str, fields=("ip.src", "ip.dst"),
+                      sep: str = "|") -> dict[str, float]:
+    """Fig. 2's query served *from the database*: packets touching
+    ``ip`` → histogram of their other endpoints.  Works on any store
+    exposing the ``row()``/``col()`` point-query protocol (EdgeStore,
+    LSMStore, ...)."""
+    out: defaultdict[str, float] = defaultdict(float)
+    for field in fields:
+        for pkt in store.col(f"{field}{sep}{ip}"):
+            for ck in store.row(pkt):
+                if ck.startswith("ip.src" + sep) or \
+                        ck.startswith("ip.dst" + sep):
+                    other = ck.split(sep, 1)[1]
+                    if other != ip:
+                        out[other] += 1.0
+    return dict(out)
+
+
 def _warn_query_deprecated(name: str) -> None:
     import warnings
     warnings.warn(
@@ -267,21 +285,8 @@ class EdgeStore:
         return Assoc(np.asarray(keys, dtype=str), "degree,",
                      np.asarray(vals))
 
-    def connections(self, ip: str, fields=("ip.src", "ip.dst"),
-                    sep: str = "|") -> dict[str, float]:
-        """Fig. 2's query served *from the database*: packets touching
-        ``ip`` → histogram of their other endpoints."""
-        out: defaultdict[str, float] = defaultdict(float)
-        for field in fields:
-            pkts = self.col(f"{field}{sep}{ip}")
-            for pkt in pkts:
-                for ck in self.row(pkt):
-                    if ck.startswith("ip.src" + sep) or \
-                            ck.startswith("ip.dst" + sep):
-                        other = ck.split(sep, 1)[1]
-                        if other != ip:
-                            out[other] += 1.0
-        return dict(out)
+    def connections(self, ip: str, **kw) -> dict[str, float]:
+        return connections_query(self, ip, **kw)
 
     # -- stats --------------------------------------------------------------
     @property
@@ -304,8 +309,15 @@ class MultiInstanceDB:
                       coordination_cost_s=coordination_cost_s)
             for i in range(n_instances)]
 
-    def route(self, file_id: str) -> EdgeStore:
-        return self.instances[abs(hash(file_id)) % len(self.instances)]
+    @staticmethod
+    def key_hash(k: str) -> int:
+        """Row/file → instance hash.  Process-salted is fine here (the
+        store is volatile); durable subclasses must override with a
+        stable hash — instance placement outlives the process there."""
+        return abs(hash(k))
+
+    def route(self, file_id: str):
+        return self.instances[self.key_hash(file_id) % len(self.instances)]
 
     def put(self, E: Assoc, file_id: str = "") -> int:
         return self.route(file_id).put(E)
@@ -317,7 +329,7 @@ class MultiInstanceDB:
         ingest finding, without tying a whole file to one instance."""
         if not len(r):
             return 0
-        h = np.asarray([abs(hash(k)) for k in r], dtype=np.int64)
+        h = np.asarray([self.key_hash(k) for k in r], dtype=np.int64)
         part = h % len(self.instances)
         n = 0
         for i in np.unique(part):

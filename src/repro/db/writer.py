@@ -29,26 +29,31 @@ Guarantees:
   ``maxsize`` (backpressure, not unbounded buffering);
 * **flush barrier** — :meth:`flush` spills every buffer and returns only
   when every queued block is applied (mutations visible to scans);
-* **error propagation** — a writer-thread failure is recorded and
-  re-raised as :class:`AsyncWriterError` from the next ``submit``,
+* **bounded retry** — a failed block is re-put with exponential backoff
+  (``max_retries`` per block, Accumulo BatchWriter semantics); the
+  single writer thread retries in place, so per-instance FIFO order is
+  preserved across retries;
+* **error propagation** — a block that exhausts its retries is recorded
+  and re-raised as :class:`AsyncWriterError` from the next ``submit``,
   ``flush``, or ``close`` (the writer keeps draining so barriers never
-  hang; the failed block's writes are lost — the caller decides whether
+  hang; the dead block's writes are lost — the caller decides whether
   to re-put).
 
 Durability contract: an async ``put`` is *applied* no later than the
 next ``flush()`` — the pipeline's stage-6 tasks enqueue and return, and
 the driver's end-of-DAG flush barrier is the commit point (see
-``pipeline/driver.py``).
+``pipeline/driver.py``).  On durable backends (anything exposing
+``sync()``, e.g. :class:`~repro.db.lsmstore.LSMStore`) ``flush`` also
+fsyncs the WAL, so the barrier commits to disk, not just to memory.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Optional
 
 import numpy as np
-
-from .edgestore import EdgeStore, MultiInstanceDB
 
 _STOP = object()
 
@@ -60,13 +65,14 @@ class AsyncWriterError(RuntimeError):
 class _InstanceWriter:
     """One store's write path: a bounded queue drained by one thread."""
 
-    def __init__(self, store: EdgeStore, maxsize: int, pool: "WriterPool"):
+    def __init__(self, store, maxsize: int, pool: "WriterPool"):
         self.store = store
         self.pool = pool
         self.q: "queue.Queue" = queue.Queue(maxsize=maxsize)
         self.buf: list = []          # tier-1 buffer, guarded by pool lock
         self.buf_rows = 0
         self.n_written = 0
+        self.n_retried = 0
         self.thread = threading.Thread(
             target=self._loop, name=f"writer/{store.name}", daemon=True)
         self.thread.start()
@@ -84,15 +90,14 @@ class _InstanceWriter:
                 pass
             stop = any(it is _STOP for it in items)
             batches = [it for it in items if it is not _STOP]
+            # any failure (even concatenation OOM) must be recorded, and
+            # task_done must run, or flush()'s q.join() hangs forever
             try:
                 if batches:
-                    fault = self.pool.fault_injector
-                    if fault is not None:
-                        fault.maybe_kill(f"writer/{self.store.name}")
                     r = np.concatenate([b[0] for b in batches])
                     c = np.concatenate([b[1] for b in batches])
                     v = np.concatenate([b[2] for b in batches])
-                    self.n_written += self.store.put_triples(r, c, v)
+                    self._apply_with_retry(r, c, v)
             except BaseException as e:  # noqa: BLE001 — propagate at barrier
                 self.pool._record_error(e)
             finally:
@@ -101,9 +106,31 @@ class _InstanceWriter:
             if stop:
                 return
 
+    def _apply_with_retry(self, r, c, v) -> None:
+        """Re-put a failed block with bounded exponential backoff
+        (Accumulo BatchWriter semantics).  Retrying in place on the
+        single writer thread keeps per-instance FIFO order; a block
+        that exhausts ``max_retries`` is recorded for the next barrier."""
+        for attempt in range(self.pool.max_retries + 1):
+            try:
+                fault = self.pool.fault_injector
+                if fault is not None:
+                    fault.maybe_kill(f"writer/{self.store.name}")
+                self.n_written += self.store.put_triples(r, c, v)
+                if attempt:
+                    self.n_retried += 1
+                return
+            except BaseException as e:  # noqa: BLE001 — propagate at barrier
+                if attempt >= self.pool.max_retries:
+                    self.pool._record_error(e)
+                    return
+                time.sleep(min(self.pool.retry_backoff_s * (2 ** attempt),
+                               self.pool.retry_backoff_max_s))
+
 
 class WriterPool:
-    """Background writer pool over an EdgeStore or MultiInstanceDB.
+    """Background writer pool over any registered backend (EdgeStore,
+    MultiInstanceDB, LSMStore, or their multi-instance fan-outs).
 
     One writer thread per instance.  ``submit`` partitions a triple batch
     by row hash across instances (mirroring
@@ -112,16 +139,29 @@ class WriterPool:
     """
 
     def __init__(self, backend, maxsize: int = 32,
-                 spill_rows: int = 25_000, fault_injector=None):
-        if isinstance(backend, MultiInstanceDB):
+                 spill_rows: int = 25_000, fault_injector=None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.05,
+                 retry_backoff_max_s: float = 2.0):
+        # duck-typed so any registered backend works: a multi-instance
+        # store exposes .instances; a single instance exposes the
+        # EdgeStore write protocol directly
+        if hasattr(backend, "instances"):
             stores = list(backend.instances)
-        elif isinstance(backend, EdgeStore):
+        elif callable(getattr(backend, "put_triples", None)):
             stores = [backend]
         else:
             raise TypeError(f"cannot attach writers to {type(backend)!r}")
         self.backend = backend
+        # partition with the backend's own routing hash — durable
+        # backends use a process-stable hash so queued writes land in
+        # the same instance directories as every other process's
+        self._key_hash = getattr(backend, "key_hash",
+                                 None) or (lambda k: abs(hash(k)))
         self.spill_rows = spill_rows
         self.fault_injector = fault_injector
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_max_s = retry_backoff_max_s
         self._lock = threading.Lock()       # guards tier-1 buffers
         # errors get their own lock: _spill can block on a full queue
         # while holding _lock, and the writer thread must still be able
@@ -162,9 +202,9 @@ class WriterPool:
         if nw == 1:
             parts = [(0, (r, c, v), n)]
         elif pin is not None:
-            parts = [(abs(hash(pin)) % nw, (r, c, v), n)]
+            parts = [(self._key_hash(pin) % nw, (r, c, v), n)]
         else:
-            h = np.asarray([abs(hash(k)) for k in r], dtype=np.int64)
+            h = np.asarray([self._key_hash(k) for k in r], dtype=np.int64)
             part = h % nw
             parts = []
             for i in np.unique(part):
@@ -198,13 +238,20 @@ class WriterPool:
     def flush(self) -> None:
         """Spill all buffers, then block until every queued block is
         applied; re-raise writer errors.  After ``flush`` returns
-        cleanly, all prior ``submit``\\ s are visible to scans."""
+        cleanly, all prior ``submit``\\ s are visible to scans — and,
+        on a durable backend, fsync'd (the WAL commit point)."""
         with self._lock:
             for w in self._writers:
                 self._spill(w)
         for w in self._writers:
             w.q.join()
         self._check()
+        self._sync_backend()
+
+    def _sync_backend(self) -> None:
+        sync = getattr(self.backend, "sync", None)
+        if sync is not None:
+            sync()
 
     def close(self) -> None:
         """Flush, stop the writer threads, and re-raise pending errors."""
@@ -220,6 +267,7 @@ class WriterPool:
         for w in self._writers:
             w.thread.join()
         self._check()
+        self._sync_backend()
 
     # -- introspection -----------------------------------------------------
     @property
@@ -231,6 +279,11 @@ class WriterPool:
     @property
     def n_written(self) -> int:
         return sum(w.n_written for w in self._writers)
+
+    @property
+    def n_retried(self) -> int:
+        """Blocks that succeeded only after at least one retry."""
+        return sum(w.n_retried for w in self._writers)
 
     def __repr__(self) -> str:
         return (f"WriterPool({len(self._writers)} writer(s), "

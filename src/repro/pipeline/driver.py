@@ -104,15 +104,21 @@ def build_tasks(cfg: PipelineConfig, db) -> List[Task]:
             tasks.append(Task(sps_id, record(sps_id)(map_stage(
                 stages.sparse_stage, raw[:-8] + ".split*.pcap.tsv.A.npz")),
                 deps=(srt_id,), stage="sparse"))
+            # defer_commit: ingest only *enqueues* writes, so its journal
+            # entry is committed at the flush barrier (where the writes
+            # are applied and fsync'd) — a crash in between re-runs the
+            # ingest on restart instead of silently losing the writes
             tasks.append(Task(ing_id, record(ing_id)(map_stage(
                 lambda p: stages.ingest(p, db),
                 raw[:-8] + ".split*.pcap.tsv.A.E.npz")),
-                deps=(sps_id,), stage="ingest"))
+                deps=(sps_id,), stage="ingest", defer_commit=True))
         chain()
 
     # flush barrier: ingest tasks only *enqueue* writes (async writer
     # pool); this task is the commit point where all queued mutations
-    # are applied — and where any writer error surfaces.
+    # are applied (and fsync'd on durable backends) — and where any
+    # writer error surfaces.  commit_point: the runner journals the
+    # deferred ingest tasks only once this barrier completes.
     flush_id = "flush/writers"
 
     def flush_writers():
@@ -121,7 +127,7 @@ def build_tasks(cfg: PipelineConfig, db) -> List[Task]:
         return stages.StageResult([], 0, 0)
 
     tasks.append(Task(flush_id, record(flush_id)(flush_writers),
-                      deps=("*",), stage="flush"))
+                      deps=("*",), stage="flush", commit_point=True))
 
     # expose per-task results on the task list for the driver to collect
     build_tasks.results = results  # type: ignore[attr-defined]
@@ -139,9 +145,12 @@ def run_pipeline(cfg: PipelineConfig, db,
     # the flush barrier task is journaled like any other; on a partial
     # restart it may be skipped while fresh ingest tasks enqueued new
     # writes — flush again here so run_pipeline never returns with
-    # queued mutations
+    # queued (or, on durable backends, un-fsync'd) mutations, then
+    # journal any ingest tasks whose commit was deferred to a barrier
+    # that only ran in a previous incarnation
     from ..db.binding import bind
     bind(db).flush()
+    runner.commit_deferred()
     results = build_tasks.results  # type: ignore[attr-defined]
     per_stage: Dict[str, dict] = {}
     for tid, res in results.items():

@@ -37,6 +37,14 @@ class Task:
     fn: Callable[[], object]          # idempotent
     deps: tuple = ()                  # "*" = every non-barrier task
     stage: str = ""                   # for per-stage stats
+    # Durability coupling for tasks whose side effects are *enqueued*
+    # rather than applied (async ingest): a defer_commit task completes
+    # for scheduling purposes but is journaled only when a commit_point
+    # task (the flush barrier, where the writes are actually applied and
+    # fsync'd) finishes.  A crash in between leaves the task unjournaled,
+    # so a restart re-runs it and the writes are replayed.
+    defer_commit: bool = False
+    commit_point: bool = False
 
 
 @dataclasses.dataclass
@@ -123,11 +131,24 @@ class Runner:
         self._speculated: set = set()
         self._failed: Dict[str, str] = {}
         self._elapsed_hist: List[float] = []
-        self.stats: Dict[str, dict] = {}
+        self._deferred: List[tuple] = []    # (tid, elapsed, stage) awaiting
+        self.stats: Dict[str, dict] = {}    # a commit-point task
 
     # -- elasticity ---------------------------------------------------------
     def set_workers(self, n: int) -> None:
         self.n_workers_target = n
+
+    # -- deferred journaling -----------------------------------------------
+    def commit_deferred(self) -> None:
+        """Journal every completed defer_commit task.  Fired when a
+        commit-point task finishes (its deps guarantee they all ran);
+        also callable by the driver after an out-of-band commit — e.g.
+        a restart whose barrier task was journaled in a *previous* run,
+        where only the driver's trailing flush covers the fresh writes."""
+        with self._lock:
+            batch, self._deferred = self._deferred, []
+        for tid, elapsed, stage in batch:
+            self.journal.commit(tid, elapsed, stage)
 
     # -- core loop ------------------------------------------------------------
     def run(self, tasks: Sequence[Task]) -> Dict[str, TaskRecord]:
@@ -217,11 +238,26 @@ class Runner:
                             task.stage, {"n": 0, "total_s": 0.0})
                         st["n"] += 1
                         st["total_s"] += elapsed
+                        if task.defer_commit:
+                            # same locked section that marks the task
+                            # done: a barrier firing the instant we
+                            # release the lock must already see this
+                            # entry, or the task stays unjournaled
+                            self._deferred.append(
+                                (tid, elapsed, task.stage))
                 if first:
                     # journal/scheduling errors must never kill a worker
                     # (the task is already recorded done)
                     try:
-                        self.journal.commit(tid, elapsed, task.stage)
+                        if task.commit_point:
+                            # the deferred tasks' writes are durable now
+                            # (the barrier flushed + fsync'd them): journal
+                            # them first, then the barrier itself, so a
+                            # crash mid-commit never records the barrier
+                            # without its ingests
+                            self.commit_deferred()
+                        if not task.defer_commit:
+                            self.journal.commit(tid, elapsed, task.stage)
                     except Exception:
                         pass
                     schedule_ready()

@@ -233,6 +233,80 @@ class TestScanCache:
         assert T.stats["cache_hit"] == 1
 
 
+class TestWriterRetry:
+    def test_transient_failure_retried_and_applied(self):
+        """A block whose first put is killed is re-put with backoff —
+        the flush barrier succeeds and no data is lost (Accumulo
+        BatchWriter semantics)."""
+        db = EdgeStore(n_tablets=2)
+        T = bind(db)
+        pool = T.writer(fault_injector=FaultInjector(kill_rate=1.0, seed=3,
+                                                     max_kills=1),
+                        retry_backoff_s=0.01)
+        put(T, small_incidence(), sync=False)
+        T.flush()                        # no AsyncWriterError raised
+        assert db.n_entries == 8
+        assert pool.n_retried >= 1
+        T.close()
+
+    def test_retries_exhausted_still_propagates(self):
+        db = EdgeStore(n_tablets=2)
+        T = bind(db)
+        T.writer(fault_injector=FaultInjector(kill_rate=1.0, seed=4),
+                 max_retries=1, retry_backoff_s=0.01)
+        put(T, small_incidence(), sync=False)
+        with pytest.raises(AsyncWriterError):
+            T.flush()
+        assert db.n_entries == 0
+
+    def test_retry_disabled_with_zero_max_retries(self):
+        db = EdgeStore(n_tablets=2)
+        T = bind(db)
+        pool = T.writer(fault_injector=FaultInjector(kill_rate=1.0, seed=5,
+                                                     max_kills=1),
+                        max_retries=0)
+        put(T, small_incidence(), sync=False)
+        with pytest.raises(AsyncWriterError):
+            T.flush()
+        assert pool.n_retried == 0
+
+
+class TestAdmissionPolicy:
+    def burst_writes(self, T, n=8):
+        for i in range(n):
+            put(T, Assoc(f"q{i},", "tcp.dstport|80,", "1,"))
+
+    def test_full_scan_skipped_on_write_heavy_backend(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg", tablets_per_instance=2)
+        cache = T._cache
+        cache.full_scan_wps_limit = 0.5      # 8 writes / 10 s window > 0.5
+        self.burst_writes(T)
+        T[:, :].eval()
+        T[:, :].eval()
+        assert T.stats["full"] == 2          # never admitted, rescanned
+        assert cache.admission_skips >= 1
+
+    def test_column_band_still_admitted(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg", tablets_per_instance=2)
+        T._cache.full_scan_wps_limit = 0.5
+        self.burst_writes(T)
+        T[:, "tcp.dstport|*,"].eval()
+        T[:, "tcp.dstport|*,"].eval()
+        assert T.stats["cache_hit"] == 1     # only 'any'-band is gated
+
+    def test_full_scan_admitted_when_quiet(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg", tablets_per_instance=2)
+        cache = T._cache
+        cache.full_scan_wps_limit = 0.5
+        self.burst_writes(T)
+        real = cache.clock
+        cache.clock = lambda: real() + cache.wps_window + 1  # burst ages out
+        T[:, :].eval()
+        T[:, :].eval()
+        assert T.stats["full"] == 1 and T.stats["cache_hit"] == 1
+        assert cache.writes_per_s == 0.0
+
+
 class TestWriterPoolUnit:
     def test_rejects_unknown_backend(self):
         with pytest.raises(TypeError):
