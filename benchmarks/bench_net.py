@@ -1,0 +1,138 @@
+"""Networked shard backend vs the in-process store: batched RPC ingest,
+chunk-streamed column queries, and the cross-shard sync barrier.
+
+This is the in-tree rerun of the orphaned ``BENCH_net.json`` experiment
+(ROADMAP open item 1): shard servers over framed TCP
+(``repro.db.netstore``), the binding/planner/cache/WriterPool unchanged
+on top.  Three sections:
+
+* **ingest** — naive per-put RPCs (one round trip per triple, what a
+  synchronous remote store costs) vs batched puts through the async
+  WriterPool (one RPC per coalesced block).  The batch path must be
+  ≥ 10x — asserted; the prior experiment measured 10–35x;
+* **column query** — the Fig. 2 hot band (``T[:, 'ip.dst|*,']``,
+  uncached) served over chunk-streamed scans vs the local memory
+  backend on the *same seed*, results asserted identical cell-for-cell
+  (prior experiment: ~1.7–2.2x local cost);
+* **sync barrier** — the cross-shard durability commit point: a clean
+  barrier (no outstanding writes — what every binding read pays) vs a
+  dirty one (fans an fsync RPC to every written shard).
+
+Emits a JSON trajectory to ``BENCH_net.json`` (CI smoke-runs this with
+BENCH_SMOKE=1).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.db import DB
+
+from .bench_ingest import make_batches
+from .common import emit, smoke, timeit, write_trajectory
+
+
+def fresh_net_table(n_shards: int):
+    return DB("Tedge", "TedgeT", "TedgeDeg", backend="net",
+              n_instances=n_shards, cache_ttl=0)
+
+
+def main() -> None:
+    n_batches, rows_per = (6, 200) if smoke() else (10, 400)
+    n_shards = 2
+    batches = make_batches(n_batches, rows_per)
+    n_entries = sum(b.nnz for b in batches)
+
+    # -- ingest: per-put RPCs vs WriterPool-coalesced batched RPCs ---------
+    triples = []
+    for b in batches:
+        r, c, v = b.triples()
+        triples.append((r, c, np.asarray(v).astype(str)))
+
+    def per_put_rpc(T):
+        for r, c, v in triples:
+            for i in range(r.shape[0]):         # one RPC per triple
+                T.backend.put_triples(r[i:i + 1], c[i:i + 1], v[i:i + 1])
+        T.backend.sync()
+
+    def batched_rpc(T):
+        for b in batches:
+            T.put(b, sync=False)                # enqueue; blocks coalesce
+        T.flush()                               # barrier: applied + synced
+        T.close()
+
+    def time_ingest(ingest, repeat=3):
+        """Median wall seconds of the ingest alone — each run gets a
+        fresh cluster, but spawn/teardown stay outside the clock (the
+        section measures RPC amortization, not server lifecycle)."""
+        times = []
+        for _ in range(repeat + 1):             # first run = warmup
+            T = fresh_net_table(n_shards)
+            try:
+                t0 = time.perf_counter()
+                ingest(T)
+                times.append(time.perf_counter() - t0)
+            finally:
+                T.backend.close()
+        times = sorted(times[1:])
+        return times[len(times) // 2]
+
+    t_naive = time_ingest(per_put_rpc)
+    t_batch = time_ingest(batched_rpc)
+    speedup = t_naive / t_batch
+    emit("net_ingest_per_put_rpc", t_naive * 1e6,
+         f"rate={n_entries / t_naive:.0f}_entries_per_s",
+         entries_per_s=n_entries / t_naive)
+    emit("net_ingest_batched_rpc", t_batch * 1e6,
+         f"rate={n_entries / t_batch:.0f}_entries_per_s;"
+         f"speedup={speedup:.1f}x",
+         entries_per_s=n_entries / t_batch, speedup_vs_per_put=speedup)
+    assert speedup >= 10.0, \
+        f"batched RPC ingest regressed to {speedup:.1f}x over per-put " \
+        f"(the coalesced-block path should be >= 10x)"
+
+    # -- column query: chunk-streamed scans vs local memory, same seed -----
+    Tm = DB("Tedge", "TedgeT", "TedgeDeg", n_instances=n_shards,
+            tablets_per_instance=4, cache_ttl=0)
+    Tn = fresh_net_table(n_shards)
+    try:
+        for b in batches:
+            Tm.put(b)
+            Tn.put(b)
+        a = Tm[:, "ip.dst|*,"].eval()
+        b_ = Tn[:, "ip.dst|*,"].eval()
+        # identical cell-for-cell: same rows, cols, values
+        assert a.triples()[0].tolist() == b_.triples()[0].tolist()
+        assert a.triples()[1].tolist() == b_.triples()[1].tolist()
+        assert list(a.triples()[2]) == list(b_.triples()[2])
+        q_mem = timeit(lambda: Tm[:, "ip.dst|*,"].eval(), repeat=3)
+        q_net = timeit(lambda: Tn[:, "ip.dst|*,"].eval(), repeat=3)
+        emit("net_colquery_memory_baseline", q_mem * 1e6, f"nnz={a.nnz}")
+        emit("net_colquery_chunk_streamed", q_net * 1e6,
+             f"nnz={b_.nnz};vs_local={q_net / q_mem:.2f}x_cost",
+             cost_vs_local=q_net / q_mem)
+
+        # -- sync barrier: clean gate vs dirty fan-out ---------------------
+        Tn.flush()
+        t_clean = timeit(Tn.backend.sync, repeat=3)
+        one = (np.asarray(["px"]), np.asarray(["ip.dst|x"]),
+               np.asarray(["1"]))
+
+        def dirty_sync():
+            Tn.backend.put_triples(*one)
+            Tn.backend.sync()
+        t_dirty = timeit(dirty_sync, repeat=3)
+        emit("net_sync_barrier_clean", t_clean * 1e6,
+             "client_side_dirty_gate")
+        emit("net_sync_barrier_dirty", t_dirty * 1e6,
+             f"fsync_fanout;vs_clean={t_dirty / max(t_clean, 1e-9):.0f}x")
+    finally:
+        Tm.close()
+        Tn.backend.close()
+
+    write_trajectory("net")
+
+
+if __name__ == "__main__":
+    main()

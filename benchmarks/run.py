@@ -9,6 +9,8 @@ docstring for the paper artifact it reproduces):
 * bench_loc              — §IV-G (135-line user pipeline claim)
 * bench_query            — Fig. 2 (connection queries)
 * bench_lsm              — persistent LSM backend vs memory (+ recovery)
+* bench_net              — networked shard backend (batched RPC ingest,
+                           chunk-streamed scans, sync barrier)
 * bench_analytics        — §III-A (device-side graph algebra)
 * bench_kernels          — Pallas kernels vs oracles
 """
@@ -19,12 +21,12 @@ import traceback
 
 def main() -> None:
     from . import (bench_analytics, bench_expansion, bench_ingest,
-                   bench_kernels, bench_loc, bench_lsm,
+                   bench_kernels, bench_loc, bench_lsm, bench_net,
                    bench_pipeline_scaling, bench_query, bench_serving)
     print("name,us_per_call,derived")
     for mod in (bench_loc, bench_expansion, bench_query, bench_ingest,
-                bench_lsm, bench_analytics, bench_kernels, bench_serving,
-                bench_pipeline_scaling):
+                bench_lsm, bench_net, bench_analytics, bench_kernels,
+                bench_serving, bench_pipeline_scaling):
         try:
             mod.main()
         except Exception:

@@ -1,8 +1,9 @@
 """Backend registry — named storage engines behind the ``DB()`` surface.
 
 PR 2 routed every caller through one binding; this registry is the
-payoff: ``DB(..., backend="memory")`` and ``DB(..., backend="lsm",
-path=...)`` bind the same query surface to interchangeable engines.
+payoff: ``DB(..., backend="memory")``, ``DB(..., backend="lsm",
+path=...)``, and ``DB(..., backend="net", addresses=[...])`` bind the
+same query surface to interchangeable engines.
 Anything implementing the :class:`~repro.db.edgestore.EdgeStore` scan
 protocol (``scan_keys`` / ``scan_key_range`` / ``scan_prefix`` /
 ``scan_everything`` / ``degree`` / ``degree_items`` / ``put_triples`` /
@@ -55,6 +56,18 @@ def _memory(*, n_instances: int, tablets_per_instance: int,
                            **options)
 
 
+def _net(*, n_instances: int, tablets_per_instance: int,
+         path: Optional[str] = None, **options):
+    """The networked shard engine: ``addresses=["host:port", ...]``
+    connects to running ``repro.db.netstore`` shard servers; without it
+    ``n_instances`` local servers are auto-started (LSM-backed under
+    ``path`` when given).  See :mod:`repro.db.netstore`."""
+    from .netstore import NetMultiInstanceDB
+    return NetMultiInstanceDB(n_instances=n_instances, path=path,
+                              tablets_per_instance=tablets_per_instance,
+                              **options)
+
+
 def _lsm(*, n_instances: int, tablets_per_instance: int,
          path: Optional[str] = None, **options):
     """The persistent LSM engine: WAL + memtable + sorted runs under
@@ -72,3 +85,4 @@ def _lsm(*, n_instances: int, tablets_per_instance: int,
 
 register_backend("memory", _memory)
 register_backend("lsm", _lsm)
+register_backend("net", _net)

@@ -51,11 +51,20 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import zlib
 from typing import Optional
 
 import numpy as np
 
 _STOP = object()
+
+
+def _stable_key_hash(k: str) -> int:
+    """Fallback routing hash for backends without a ``key_hash`` hook:
+    crc32, matching ``LSMMultiInstanceDB.key_hash`` — ``pin=``-based
+    file→instance routing must agree across producer processes, and
+    Python's ``hash()`` is process-salted."""
+    return zlib.crc32(k.encode())
 
 
 class AsyncWriterError(RuntimeError):
@@ -156,7 +165,7 @@ class WriterPool:
         # backends use a process-stable hash so queued writes land in
         # the same instance directories as every other process's
         self._key_hash = getattr(backend, "key_hash",
-                                 None) or (lambda k: abs(hash(k)))
+                                 None) or _stable_key_hash
         self.spill_rows = spill_rows
         self.fault_injector = fault_injector
         self.max_retries = max_retries

@@ -110,17 +110,16 @@ class TestElasticRemesh:
             import jax, numpy as np
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro import checkpoint as C
+            from repro.launch.mesh import make_mesh
 
             tree = {{"w": jax.numpy.arange(64, dtype=jax.numpy.float32)
                     .reshape(8, 8)}}
-            mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh1 = make_mesh((2, 4), ("data", "model"))
             sh1 = {{"w": NamedSharding(mesh1, P("data", "model"))}}
             placed = jax.device_put(tree, sh1)
             C.save(r"{tmp_path}", 0, placed)
 
-            mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh2 = make_mesh((4, 2), ("data", "model"))
             sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
             back, _ = C.restore(r"{tmp_path}", tree, shardings=sh2)
             assert back["w"].sharding == sh2["w"]

@@ -39,9 +39,8 @@ class TestParamSpecs:
     def test_nondivisible_dims_dropped(self):
         """granite: 40 experts on tp=16 → hybrid (no expert sharding)."""
         import numpy as np
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         params = abstract_params(get_config("granite-moe-3b-a800m"))
         # with tp=16 metadata: use explicit spec fn on shapes
 
@@ -85,8 +84,8 @@ class TestDryRunSubprocess:
                 sharding as S
             from repro.train.trainer import make_train_step
 
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((2, 4), ("data", "model"))
             cfg = smoke_config("recurrentgemma-9b")
             shape = ShapeConfig("t", 32, 4, "train")
             specs = I.input_specs(cfg, shape)
@@ -127,8 +126,8 @@ class TestDistributedAnalytics:
             from repro.core import graph
             from repro.analytics import distributed as D
 
-            mesh = jax.make_mesh((8,), ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((8,), ("data",))
             rng = np.random.default_rng(0)
             n, nnz = 200, 3000
             m = COO.from_numpy(rng.integers(0, n, nnz),
@@ -188,8 +187,8 @@ class TestGradCompression:
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.train.compression import compressed_pod_mean
 
-            mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
             rng = np.random.default_rng(0)
             g = jnp.asarray(rng.normal(0, 0.1, (64, 32))
                             .astype(np.float32))
