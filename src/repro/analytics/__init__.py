@@ -1,16 +1,19 @@
 """repro.analytics — network analytics over associative arrays."""
-from .anomaly import C2Report, detect_c2, scan_detect
+from .anomaly import C2Report, ScanReport, detect_c2, scan_detect, \
+    scan_report
 from .dimensional import field_correlation, field_names, field_stats, \
     top_correlated_pairs
 from .powerlaw import PowerLawFit, background_scores, degree_histogram, \
     fit_degree_table, fit_rank_size
+from .serialize import to_jsonable
 from . import distributed
 
 __all__ = [
-    "detect_c2", "scan_detect", "C2Report",
+    "detect_c2", "scan_detect", "scan_report", "C2Report", "ScanReport",
     "field_stats", "field_names", "field_correlation",
     "top_correlated_pairs",
     "fit_rank_size", "fit_degree_table", "degree_histogram",
     "background_scores", "PowerLawFit",
+    "to_jsonable",
     "distributed",
 ]

@@ -31,6 +31,7 @@ import numpy as np
 from ..core.assoc import Assoc, StartsWith
 from ..core.expr import LazyAssoc
 from . import powerlaw
+from .serialize import JsonReportMixin
 
 Queryable = Union[Assoc, LazyAssoc, "DBTable"]  # anything with E[r, c]
 
@@ -41,6 +42,22 @@ class C2Report(NamedTuple):
     fanin: np.ndarray
     regularity: np.ndarray
     port_conc: np.ndarray
+
+    # JSON report path (numpy/jax fields coerced; see analytics.serialize)
+    to_dict = JsonReportMixin.to_dict
+    to_json = JsonReportMixin.to_json
+    from_dict = classmethod(JsonReportMixin.from_dict.__func__)
+
+
+class ScanReport(NamedTuple):
+    """``scan_detect`` hits plus the threshold they cleared — the
+    JSON-serializable shape the gateway's ``/v1/scanners`` route ships."""
+    hosts: np.ndarray          # scanner src IPs
+    min_fanout: int
+
+    to_dict = JsonReportMixin.to_dict
+    to_json = JsonReportMixin.to_json
+    from_dict = classmethod(JsonReportMixin.from_dict.__func__)
 
 
 def _strip(keys: np.ndarray, prefix: str) -> np.ndarray:
@@ -171,3 +188,10 @@ def scan_detect(E: Queryable, sep: str = "|",
         if u >= min_fanout and u / max(v2_by_key.get(k, 1.0), 1.0) > 0.9:
             hits.append(k[len(f"ip.src{sep}"):])
     return np.asarray(hits, dtype=str)
+
+
+def scan_report(E: Queryable, sep: str = "|",
+                min_fanout: int = 32) -> ScanReport:
+    """:func:`scan_detect` wrapped in the JSON-serializable report shape."""
+    return ScanReport(scan_detect(E, sep=sep, min_fanout=min_fanout),
+                      min_fanout)

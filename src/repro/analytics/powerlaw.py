@@ -16,12 +16,19 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .serialize import JsonReportMixin
+
 
 class PowerLawFit(NamedTuple):
     alpha: jax.Array      # rank-size exponent (degree ~ C · rank^-alpha)
     log_c: jax.Array      # intercept
     resid: jax.Array      # per-rank log residual (obs - model)
     r2: jax.Array
+
+    # JSON report path (jax scalars coerced; see analytics.serialize)
+    to_dict = JsonReportMixin.to_dict
+    to_json = JsonReportMixin.to_json
+    from_dict = classmethod(JsonReportMixin.from_dict.__func__)
 
 
 @jax.jit

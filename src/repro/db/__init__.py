@@ -9,7 +9,8 @@ the durable WAL + sorted-runs store), or ``backend="net"``
 LSM or memory store behind a framed TCP protocol).
 """
 from .binding import (DB, DEFAULT_FULL_SCAN_WPS_LIMIT, DEFAULT_SCAN_TTL,
-                      AccidentalDenseError, DBTable, ScanCache, bind, put)
+                      AccidentalDenseError, DBTable, ScanCache, TableStats,
+                      bind, put)
 from .edgestore import EdgeStore, MultiInstanceDB, Tablet
 from .lsmstore import LSMMultiInstanceDB, LSMStore, SSTable
 from .netstore import (NetMultiInstanceDB, ShardClient, ShardError,
@@ -22,5 +23,5 @@ __all__ = ["DB", "DBTable", "put", "bind", "AccidentalDenseError",
            "LSMStore", "LSMMultiInstanceDB", "SSTable",
            "NetMultiInstanceDB", "ShardServer", "ShardClient", "ShardError",
            "BACKENDS", "register_backend", "make_backend",
-           "WriterPool", "AsyncWriterError", "ScanCache",
+           "WriterPool", "AsyncWriterError", "ScanCache", "TableStats",
            "DEFAULT_SCAN_TTL", "DEFAULT_FULL_SCAN_WPS_LIMIT"]

@@ -275,6 +275,53 @@ class ScanCache:
                 f"hits={self.hits}, misses={self.misses})")
 
 
+class TableStats(dict):
+    """Route counters (a plain mapping: ``T.stats["col"]``) that is also
+    *callable*: ``T.stats()`` returns one merged observability snapshot —
+    route counts plus :class:`ScanCache` hit/miss/admission counters, the
+    :class:`~repro.db.writer.WriterPool` queue state, and backend sync/RPC
+    counts — so serving layers (the gateway's ``/stats`` endpoint, bench
+    assertions) read a single structure instead of poking three objects.
+
+    The snapshot is read-mostly: it takes no barriers, issues no scans,
+    and touches only in-process counters (no per-shard RPCs on the net
+    backend), so it is safe to poll at stream frequency.
+    """
+
+    def __init__(self, table: "DBTable"):
+        super().__init__(row=0, col=0, full=0, deg=0,
+                         cache_hit=0, cache_miss=0)
+        self._table = table
+
+    def __call__(self) -> dict:
+        t = self._table
+        out = {"routes": {k: v for k, v in self.items()}}
+        cache = t._cache or getattr(t.backend, "_scan_cache", None)
+        if cache is not None:
+            out["cache"] = {"hits": cache.hits, "misses": cache.misses,
+                            "evictions": cache.evictions,
+                            "admission_skips": cache.admission_skips,
+                            "entries": len(cache),
+                            "writes_per_s": cache.writes_per_s,
+                            "full_scan_wps_limit": cache.full_scan_wps_limit}
+        else:
+            out["cache"] = {"hits": 0, "misses": 0, "evictions": 0,
+                            "admission_skips": 0, "entries": 0,
+                            "writes_per_s": 0.0,
+                            "full_scan_wps_limit": float("inf")}
+        pool = getattr(t.backend, "_writer_pool", None)
+        out["writers"] = pool.stats() if pool is not None else {
+            "pending": 0, "queue_depth": 0, "n_written": 0,
+            "n_retried": 0, "n_errors": 0, "n_writers": 0}
+        insts = getattr(t.backend, "instances", [t.backend])
+        out["backend"] = {
+            "kind": type(t.backend).__name__,
+            "n_instances": len(insts),
+            "n_syncs": sum(getattr(i, "n_syncs", 0) for i in insts),
+            "n_rpcs": sum(getattr(i, "n_rpcs", 0) for i in insts)}
+        return out
+
+
 # Serializes lazy attachment of shared per-backend state (scan cache,
 # writer pool): concurrent pipeline tasks binding the same store must
 # never each create one — the loser's buffered writes would be orphaned.
@@ -315,7 +362,10 @@ class DBTable:
     Subscripts build deferred expressions (:class:`LazyAssoc`); call
     ``.eval()`` — or any data accessor like ``.triples()`` — to execute.
     ``stats`` counts which physical route served each scan
-    (``row``/``col``/``full``/``deg``), which the routing tests assert on.
+    (``row``/``col``/``full``/``deg``), which the routing tests assert
+    on; *calling* it (``T.stats()``) returns the merged observability
+    snapshot (routes + cache + writers + backend) — see
+    :class:`TableStats`.
     """
 
     def __init__(self, backend: Backend, tables: Sequence[str],
@@ -332,8 +382,7 @@ class DBTable:
         self.degree_limit = degree_limit
         self.cache_ttl = DEFAULT_SCAN_TTL if cache_ttl is None else cache_ttl
         self._cache = _cache_for(backend, self.cache_ttl)
-        self.stats = {"row": 0, "col": 0, "full": 0, "deg": 0,
-                      "cache_hit": 0, "cache_miss": 0}
+        self.stats = TableStats(self)
 
     # -- construction-time variants ---------------------------------------
     def with_degree_limit(self, limit: Optional[float]) -> "DBTable":
@@ -374,14 +423,14 @@ class DBTable:
     # -- degree table ------------------------------------------------------
     def degree(self, col_key: str) -> float:
         """Point TedgeDeg lookup (the combiner-maintained degree)."""
-        self.flush()
+        self._read_barrier()
         self.stats["deg"] += 1
         return self.backend.degree(col_key)
 
     def degree_assoc(self, prefix: str = "") -> Assoc:
         """TedgeDeg as an Assoc (keys × 'degree'), optionally restricted
         to a column-key prefix — the power-law analytics input."""
-        self.flush()
+        self._read_barrier()
         self.stats["deg"] += 1
         items = list(self.backend.degree_items(prefix))
         if not items:
@@ -463,6 +512,37 @@ class DBTable:
             if sync is not None:
                 sync()              # sync puts still commit at the barrier
 
+    def _read_barrier(self) -> None:
+        """Visibility barrier on the read path: waits only for writes
+        enqueued *before* this read (the pool's spill-sequence snapshot)
+        and skips the durability fsync — so many concurrent reader
+        threads stay live during sustained ingest instead of serializing
+        behind a write barrier that never empties.  Sync (poolless) puts
+        are applied inline and need no wait at all."""
+        pool = getattr(self.backend, "_writer_pool", None)
+        if pool is not None:
+            pool.drain()
+
+    # -- serving-layer admission hook --------------------------------------
+    @property
+    def write_rate(self) -> float:
+        """Trailing writes/s seen by this backend's scan cache (0.0 when
+        caching is disabled) — the admission signal serving layers use."""
+        cache = self._cache or getattr(self.backend, "_scan_cache", None)
+        return 0.0 if cache is None else cache.writes_per_s
+
+    def admit_full_scan(self) -> bool:
+        """Read-mostly admission check for full-table work: False while
+        the trailing write rate exceeds the cache's
+        ``full_scan_wps_limit`` (the same signal that stops 'any'-band
+        cache admission) — a full scan issued now would be stale before
+        it finished and its cache entry evicted by the next write.  The
+        gateway maps a refusal to HTTP 429 + Retry-After."""
+        cache = self._cache or getattr(self.backend, "_scan_cache", None)
+        if cache is None:
+            return True
+        return cache.writes_per_s <= cache.full_scan_wps_limit
+
     def close(self) -> None:
         """Flush and stop the backend's writer pool (if any); on a
         durable backend with no pool, still fsync — close is a commit
@@ -480,7 +560,7 @@ class DBTable:
 
     # -- scan execution (called by the LazyAssoc executor) -----------------
     def _scan(self, rsel, csel) -> Assoc:
-        self.flush()                    # async writes become visible here
+        self._read_barrier()            # async writes become visible here
         ratoms = catoms = None
         if not self._is_degree:
             ratoms, catoms = _classify(rsel), _classify(csel)

@@ -28,7 +28,12 @@ Guarantees:
 * **bounded memory** — buffers spill at ``spill_rows``; queues have
   ``maxsize`` (backpressure, not unbounded buffering);
 * **flush barrier** — :meth:`flush` spills every buffer and returns only
-  when every queued block is applied (mutations visible to scans);
+  when every block queued *before the call* is applied (mutations
+  visible to scans); :meth:`drain` is the same wait without the
+  durability fsync — the binding's read barrier, so gateway reader
+  threads are never serialized behind ingest that keeps arriving while
+  they wait (each barrier is a snapshot of the spill sequence, not a
+  wait for an empty queue);
 * **bounded retry** — a failed block is re-put with exponential backoff
   (``max_retries`` per block, Accumulo BatchWriter semantics); the
   single writer thread retries in place, so per-instance FIFO order is
@@ -82,6 +87,15 @@ class _InstanceWriter:
         self.buf_rows = 0
         self.n_written = 0
         self.n_retried = 0
+        # spill-sequence barrier state: blocks are queued as
+        # (seq, block); applied_seq advances (under cond) once a block's
+        # mutation has landed — error or not, so barriers never hang.
+        # Barriers snapshot spilled_seq and wait for applied_seq to
+        # reach it, which waits only on blocks that *preceded* the
+        # barrier, never on ingest still arriving behind it.
+        self.spilled_seq = 0         # guarded by pool lock (spill path)
+        self.applied_seq = 0         # guarded by cond
+        self.cond = threading.Condition()
         self.thread = threading.Thread(
             target=self._loop, name=f"writer/{store.name}", daemon=True)
         self.thread.start()
@@ -103,17 +117,30 @@ class _InstanceWriter:
             # task_done must run, or flush()'s q.join() hangs forever
             try:
                 if batches:
-                    r = np.concatenate([b[0] for b in batches])
-                    c = np.concatenate([b[1] for b in batches])
-                    v = np.concatenate([b[2] for b in batches])
+                    r = np.concatenate([b[0] for (_, b) in batches])
+                    c = np.concatenate([b[1] for (_, b) in batches])
+                    v = np.concatenate([b[2] for (_, b) in batches])
                     self._apply_with_retry(r, c, v)
             except BaseException as e:  # noqa: BLE001 — propagate at barrier
                 self.pool._record_error(e)
             finally:
+                if batches:
+                    with self.cond:
+                        self.applied_seq = max(self.applied_seq,
+                                               *(s for (s, _) in batches))
+                        self.cond.notify_all()
                 for _ in items:
                     self.q.task_done()
             if stop:
                 return
+
+    def _await_applied(self, seq: int) -> None:
+        """Block until every block spilled at or before ``seq`` has been
+        applied (or recorded as failed — ``applied_seq`` advances either
+        way, so a dead block can never wedge a barrier)."""
+        with self.cond:
+            while self.applied_seq < seq:
+                self.cond.wait()
 
     def _apply_with_retry(self, r, c, v) -> None:
         """Re-put a failed block with bounded exponential backoff
@@ -241,20 +268,37 @@ class WriterPool:
                           for i in range(3))
         w.buf = []
         w.buf_rows = 0
-        w.q.put(block)
+        w.spilled_seq += 1
+        w.q.put((w.spilled_seq, block))
 
     # -- barriers ----------------------------------------------------------
-    def flush(self) -> None:
-        """Spill all buffers, then block until every queued block is
-        applied; re-raise writer errors.  After ``flush`` returns
-        cleanly, all prior ``submit``\\ s are visible to scans — and,
-        on a durable backend, fsync'd (the WAL commit point)."""
+    def _barrier(self) -> None:
+        """Spill every buffer, then wait for the *snapshot* of spilled
+        blocks to apply.  Ingest submitted while we wait does not extend
+        the wait — the property that keeps many concurrent reader
+        barriers live during sustained ingest."""
         with self._lock:
             for w in self._writers:
                 self._spill(w)
-        for w in self._writers:
-            w.q.join()
+            targets = [(w, w.spilled_seq) for w in self._writers]
+        for w, seq in targets:
+            w._await_applied(seq)
         self._check()
+
+    def drain(self) -> None:
+        """Visibility barrier (the binding's read path): all ``submit``\\ s
+        that happened before this call are applied and visible to scans.
+        No durability fsync — reads need visibility, not persistence —
+        so on LSM/net backends concurrent readers skip the WAL/RPC sync
+        entirely."""
+        self._barrier()
+
+    def flush(self) -> None:
+        """Durability barrier: :meth:`drain` semantics *plus* the backend
+        fsync; re-raises writer errors.  After ``flush`` returns cleanly,
+        all prior ``submit``\\ s are visible to scans and, on a durable
+        backend, committed to disk (the WAL commit point)."""
+        self._barrier()
         self._sync_backend()
 
     def _sync_backend(self) -> None:
@@ -293,6 +337,17 @@ class WriterPool:
     def n_retried(self) -> int:
         """Blocks that succeeded only after at least one retry."""
         return sum(w.n_retried for w in self._writers)
+
+    def stats(self) -> dict:
+        """Counter snapshot (merged into ``DBTable.stats()``)."""
+        with self._err_lock:
+            n_err = len(self._errors)
+        return {"pending": self.pending,
+                "queue_depth": sum(w.q.qsize() for w in self._writers),
+                "n_written": self.n_written,
+                "n_retried": self.n_retried,
+                "n_errors": n_err,
+                "n_writers": len(self._writers)}
 
     def __repr__(self) -> str:
         return (f"WriterPool({len(self._writers)} writer(s), "

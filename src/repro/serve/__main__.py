@@ -1,0 +1,5 @@
+"""``python -m repro.serve`` — run the analytics gateway standalone."""
+from .app import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Background job queue for long analytics.
+
+PageRank over the whole graph or a full-table power-law fit can take
+longer than an interactive HTTP request should hold a connection, and
+running them on gateway request threads would starve the cheap query
+endpoints.  Jobs decouple the two: ``POST /v1/jobs`` enqueues, a small
+bounded worker pool executes, and the client polls
+``GET /v1/jobs/<id>`` until ``done`` then fetches the result.
+
+Bounds, because a serving tier must fail fast rather than buffer
+unboundedly:
+
+* ``max_queued`` — total queued jobs; beyond it submission raises
+  :class:`QueueFull` → HTTP 503 (the cluster is saturated, retry later);
+* per-tenant ``max_jobs`` (from :class:`~repro.serve.auth.Tenant`) —
+  one tenant cannot occupy the whole queue;
+* ``result_ttl`` — finished jobs are dropped after this many seconds
+  (first-poll-after-expiry sweeps them), bounding result memory.
+
+Results must already be JSON-serializable — job functions return
+``to_dict()``-style payloads (see ``repro.serve.routes``).
+"""
+from __future__ import annotations
+
+import queue
+import secrets
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+from .auth import Tenant
+
+
+class QueueFull(Exception):
+    """The job queue is at capacity; mapped to HTTP 503."""
+    status = 503
+
+
+class UnknownJob(KeyError):
+    """No such job id (or its result already expired); HTTP 404."""
+    status = 404
+
+
+class Job:
+    __slots__ = ("id", "kind", "tenant", "status", "result", "error",
+                 "submitted_at", "started_at", "finished_at")
+
+    def __init__(self, kind: str, tenant: str, clock=time.monotonic):
+        self.id = secrets.token_hex(8)
+        self.kind = kind
+        self.tenant = tenant
+        self.status = "queued"          # queued | running | done | failed
+        self.result = None
+        self.error: Optional[str] = None
+        self.submitted_at = clock()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+
+    def describe(self) -> dict:
+        out = {"job": self.id, "kind": self.kind, "tenant": self.tenant,
+               "status": self.status}
+        if self.error is not None:
+            out["error"] = self.error
+        return out
+
+
+class JobQueue:
+    """Bounded worker threads draining a FIFO of analytics jobs."""
+
+    def __init__(self, n_workers: int = 2, max_queued: int = 64,
+                 result_ttl: float = 600.0, clock=time.monotonic):
+        self.max_queued = max_queued
+        self.result_ttl = result_ttl
+        self.clock = clock
+        self._q: "queue.Queue" = queue.Queue()
+        self._jobs: Dict[str, Job] = {}
+        self._lock = threading.Lock()
+        self._closed = threading.Event()
+        self._workers = [
+            threading.Thread(target=self._work, name=f"gateway-job/{i}",
+                             daemon=True)
+            for i in range(max(n_workers, 1))]
+        for w in self._workers:
+            w.start()
+
+    # -- submission / polling ----------------------------------------------
+    def submit(self, kind: str, fn: Callable[[], dict],
+               tenant: Tenant) -> Job:
+        """Enqueue ``fn``; raises :class:`QueueFull` when the global or
+        per-tenant bound is hit."""
+        with self._lock:
+            self._sweep_locked()
+            live = [j for j in self._jobs.values()
+                    if j.status in ("queued", "running")]
+            if len(live) >= self.max_queued:
+                raise QueueFull(f"job queue full ({self.max_queued} live)")
+            mine = sum(1 for j in live if j.tenant == tenant.name)
+            if mine >= tenant.max_jobs:
+                raise QueueFull(
+                    f"tenant {tenant.name!r} at its job bound "
+                    f"({tenant.max_jobs})")
+            job = Job(kind, tenant.name, clock=self.clock)
+            self._jobs[job.id] = job
+        self._q.put((job, fn))
+        return job
+
+    def get(self, job_id: str) -> Job:
+        with self._lock:
+            self._sweep_locked()
+            job = self._jobs.get(job_id)
+        if job is None:
+            raise UnknownJob(job_id)
+        return job
+
+    def _sweep_locked(self) -> None:
+        now = self.clock()
+        dead = [jid for jid, j in self._jobs.items()
+                if j.finished_at is not None
+                and now - j.finished_at > self.result_ttl]
+        for jid in dead:
+            del self._jobs[jid]
+
+    # -- execution ---------------------------------------------------------
+    def _work(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            job, fn = item
+            if self._closed.is_set():
+                job.status = "failed"
+                job.error = "gateway shutting down"
+                job.finished_at = self.clock()
+                continue
+            job.status = "running"
+            job.started_at = self.clock()
+            try:
+                job.result = fn()
+                job.status = "done"
+            except Exception as e:      # surfaced via the status poll
+                job.error = f"{type(e).__name__}: {e}"
+                job.status = "failed"
+            finally:
+                job.finished_at = self.clock()
+
+    def close(self) -> None:
+        """Stop the workers; queued-but-unstarted jobs fail fast."""
+        self._closed.set()
+        for _ in self._workers:
+            self._q.put(None)
+        for w in self._workers:
+            w.join(timeout=5)
+
+    def stats(self) -> dict:
+        with self._lock:
+            by_status: Dict[str, int] = {}
+            for j in self._jobs.values():
+                by_status[j.status] = by_status.get(j.status, 0) + 1
+        return {"by_status": by_status, "n_workers": len(self._workers),
+                "max_queued": self.max_queued}
