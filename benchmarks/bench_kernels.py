@@ -2,6 +2,13 @@
 path; wall numbers are NOT TPU perf, the roofline table covers that).
 Compares each kernel's interpret-mode call against its compiled pure-jnp
 oracle to document overhead and validate at benchmark shapes.
+
+The SpMV-loop vs batched-SpMM section is the CI perf gate for the
+batched analytics layer: answering b column queries as one SpMM launch
+must beat b sequential SpMV launches (the per-query dispatch the
+gateway used to pay) by ≥ 2x at b=8.  The roofline columns model the
+TPU story: bytes/query collapse because the ELL block streams from HBM
+once per *batch* instead of once per *query*.
 """
 from __future__ import annotations
 
@@ -12,8 +19,70 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.segsum import segsum
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.spmm import spmm_ell
+from repro.kernels.spmv import spmv_ell
 
-from .common import emit, timeit
+from .common import emit, smoke, timeit, write_trajectory
+
+
+def spmm_roofline() -> None:
+    """SpMV-loop vs batched SpMM at b ∈ {1, 8, 64}: wall time (interpret
+    mode — dispatch-bound, which is exactly what batching removes) plus
+    the HBM-traffic roofline model (achieved GB/s vs TPU peak)."""
+    from repro.launch.roofline import HBM_BW
+
+    R, C, K = (1024, 1024, 4) if smoke() else (2048, 2048, 4)
+    br, bc = 256, 1024
+    rng = np.random.default_rng(42)
+    ecols = jnp.asarray(rng.integers(0, C, (R, K)), jnp.int32)
+    evals = jnp.asarray(rng.normal(0, 1, (R, K)).astype(np.float32))
+    ell_bytes = R * K * (4 + 4)                 # cols int32 + vals f32
+
+    ratio_at_8 = None
+    for b in (1, 8) if smoke() else (1, 8, 64):
+        X = jnp.asarray(rng.normal(0, 1, (C, b)).astype(np.float32))
+
+        def loop():
+            for j in range(b):
+                spmv_ell(ecols, evals, X[:, j], block_rows=br,
+                         block_cols=bc).block_until_ready()
+
+        def batched():
+            spmm_ell(ecols, evals, X, block_rows=br,
+                     block_cols=bc).block_until_ready()
+
+        # equivalence at bench shape before timing it
+        Y = np.stack([np.asarray(spmv_ell(ecols, evals, X[:, j],
+                                          block_rows=br, block_cols=bc))
+                      for j in range(b)], axis=1)
+        ok = np.allclose(np.asarray(spmm_ell(ecols, evals, X,
+                                             block_rows=br, block_cols=bc)),
+                         Y, atol=1e-4)
+        t_loop = timeit(loop, repeat=3)
+        t_spmm = timeit(batched, repeat=3)
+        # HBM traffic model: the loop streams the ELL block per query,
+        # the batch streams it once
+        bytes_loop = b * (ell_bytes + C * 4 + R * 4)
+        bytes_spmm = ell_bytes + C * b * 4 + R * b * 4
+        gbs_loop = bytes_loop / t_loop / 1e9
+        gbs_spmm = bytes_spmm / t_spmm / 1e9
+        speedup = t_loop / t_spmm
+        emit(f"spmv_loop_b{b}", t_loop / b * 1e6,
+             f"allclose={ok} gbs={gbs_loop:.3f}",
+             achieved_gb_s=round(gbs_loop, 4),
+             peak_gb_s=HBM_BW / 1e9,
+             pct_peak=round(100 * gbs_loop * 1e9 / HBM_BW, 4))
+        emit(f"spmm_batched_b{b}", t_spmm / b * 1e6,
+             f"speedup={speedup:.2f}x gbs={gbs_spmm:.3f}",
+             achieved_gb_s=round(gbs_spmm, 4),
+             peak_gb_s=HBM_BW / 1e9,
+             pct_peak=round(100 * gbs_spmm * 1e9 / HBM_BW, 4),
+             speedup_vs_loop=round(speedup, 3))
+        if b == 8:
+            ratio_at_8 = speedup
+    # the CI gate: one launch for 8 queries ≥ 2x the 8-launch loop
+    assert ratio_at_8 is not None and ratio_at_8 >= 2.0, \
+        f"batched SpMM only {ratio_at_8:.2f}x the SpMV loop at b=8 (< 2x)"
 
 
 def main() -> None:
@@ -37,6 +106,9 @@ def main() -> None:
     t = timeit(lambda: ref.flash_attention_ref(q, k, v).block_until_ready(),
                repeat=5)
     emit("flash_attn_oracle_256", t * 1e6, f"kernel_allclose={ok}")
+
+    spmm_roofline()
+    write_trajectory("kernels")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ The paper's primary contribution as a composable JAX library:
 * :mod:`repro.core.graph` — incidence→adjacency, degree tables, PageRank.
 """
 from .assoc import All, Assoc, KeyRange, StartsWith
-from .expr import LazyAssoc, lazy
+from .expr import LazyAssoc, eval_batch, lazy, lazy_batch
 from .schema import col2val, parse_tsv, to_tsv, val2col
 from .semiring import (MAX_MIN, MAX_PLUS, MAX_TIMES, MIN_PLUS, OR_AND,
                        PLUS_TIMES, Semiring)
@@ -18,6 +18,7 @@ from . import graph
 
 __all__ = [
     "Assoc", "All", "KeyRange", "StartsWith", "LazyAssoc", "lazy",
+    "lazy_batch", "eval_batch",
     "parse_tsv", "to_tsv", "val2col", "col2val",
     "Semiring", "PLUS_TIMES", "MIN_PLUS", "MAX_PLUS", "MAX_MIN", "MAX_TIMES",
     "OR_AND",

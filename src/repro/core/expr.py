@@ -48,6 +48,17 @@ DEVICE_NNZ_THRESHOLD = 32768
 USE_PALLAS_SPMV = __import__("os").environ.get(
     "REPRO_USE_PALLAS_SPMV", "0") == "1"
 
+# Device launch odometer: every device-lowered matvec/multivec product
+# bumps its counter.  This is the observability hook the batch-fusion
+# tests (and the serving layer's stats) use to prove N chains executed
+# as ONE fused SpMM launch instead of N SpMV launches.
+KERNEL_LAUNCHES = {"spmv": 0, "spmm": 0}
+
+
+def launch_counts() -> dict:
+    """Snapshot of the device launch counters (copy — safe to diff)."""
+    return dict(KERNEL_LAUNCHES)
+
 _FUSABLE = frozenset({"logical", "filter", "scale", "shift"})
 _ELEMENTWISE_BIN = frozenset({"add", "sub", "emul"})
 
@@ -511,6 +522,7 @@ def _device_spmv_dev(asm, x):
     or the Pallas ELL kernel when enabled (repro.kernels.spmv — the TPU
     hot path, compiled on TPU / interpreted elsewhere)."""
     import jax.numpy as jnp
+    KERNEL_LAUNCHES["spmv"] += 1
     if USE_PALLAS_SPMV:
         from ..kernels import spmv as kspmv
         csr = asm.tocsr()
@@ -520,6 +532,25 @@ def _device_spmv_dev(asm, x):
         return kspmv.spmv_ell(ecols, evals, x.astype(jnp.float32))
     coo = S.coo_from_scipy(asm)
     return S.spmv(coo, x)
+
+
+def _device_spmm_dev(asm, X):
+    """Y = A @ X on device with X a dense (n, b) multi-vector — the
+    batched unit: one launch answers all b queries.  Pallas ELL SpMM
+    when enabled (same ``USE_PALLAS_SPMV`` switch as the matvec path,
+    the env now covers SpMM), COO segment reduction otherwise."""
+    import jax.numpy as jnp
+    KERNEL_LAUNCHES["spmm"] += 1
+    if USE_PALLAS_SPMV:
+        from ..kernels import spmm as kspmm
+        from ..kernels import spmv as kspmv
+        csr = asm.tocsr()
+        k_max = int(max(np.diff(csr.indptr).max(), 1))
+        ecols, evals = kspmv.csr_to_ell(csr.indptr, csr.indices, csr.data,
+                                        csr.shape[0], k_max)
+        return kspmm.spmm_ell(ecols, evals, X.astype(jnp.float32))
+    coo = S.coo_from_scipy(asm)
+    return S.spmm(coo, X)
 
 
 def _device_spmv(asm, x: np.ndarray) -> np.ndarray:
@@ -561,3 +592,179 @@ def _device_matmul_chain(mats) -> Optional[Assoc]:
         yv, (yv.shape[0], 1))
     sm.eliminate_zeros()
     return Assoc._from_parts(y_keys, vec.col, None, sm)._compact()
+
+
+# ---------------------------------------------------------------------------
+# Batch evaluation: N expressions, one executor, fused device launches.
+# ---------------------------------------------------------------------------
+
+def lazy_batch(exprs) -> list:
+    """Wrap a sequence of expressions (Assoc / LazyAssoc / table) into
+    deferred nodes destined for one :func:`eval_batch` call."""
+    return [LazyAssoc.wrap(x) for x in exprs]
+
+
+def eval_batch(exprs) -> list:
+    """Evaluate N independent expressions as ONE batch.
+
+    Beyond per-DAG planning, the batch executor exploits *cross*-expression
+    structure (arXiv:2309.02464's real-time trick — many hypersparse
+    queries per launch):
+
+    * **batch CSE** — one shared executor memoizes across all N DAGs, so
+      structurally identical subtrees (the same table scan issued by
+      every member) execute once;
+    * **scan batching** — distinct scans against the same
+      :class:`~repro.db.binding.DBTable` prefetch through
+      ``table._scan_batch``: one union tablet scan per physical route,
+      split per member host-side (each member still lands its own
+      :class:`~repro.db.binding.ScanCache` entry);
+    * **SpMM chain fusion** — matvec chains over identical factor lists
+      (same structural scan key, different tail vectors) stack their
+      vectors into a dense multi-vector and run as one device SpMM
+      launch per factor (:func:`_device_spmm_dev`) instead of N SpMV
+      launches, the intermediate multi-vector staying on device.
+
+    Returns the evaluated :class:`Assoc` list, aligned with the input.
+    Error semantics match per-member ``.eval()``: a member whose scan
+    raises (e.g. the degree guard) raises when *that* member executes —
+    such members are simply excluded from the fused prefetch.
+    """
+    nodes = [LazyAssoc.wrap(x) for x in exprs]
+    ex = _Executor()
+    plans = [n if n._value is not None else _optimize(n) for n in nodes]
+    live = [p for n, p in zip(nodes, plans) if n._value is None]
+    if len(live) >= 2:
+        _prefetch_batch_scans(live, ex)
+        _fuse_chain_groups(live, ex)
+    out = []
+    for n, p in zip(nodes, plans):
+        if n._value is None:
+            n._value = ex.run(p)
+        out.append(n._value)
+    return out
+
+
+def _collect_scans(node: LazyAssoc, out: dict) -> None:
+    if node._value is not None:
+        return
+    if node.op == "scan":
+        out.setdefault(_skey(node), node)
+    for c in node.children:
+        _collect_scans(c, out)
+
+
+def _prefetch_batch_scans(plans, ex: "_Executor") -> None:
+    """Group the batch's distinct scan leaves by table and serve each
+    group through one ``_scan_batch`` union scan, seeding the executor's
+    memo (members the table declines stay lazy and scan individually)."""
+    scans: dict = {}
+    for p in plans:
+        _collect_scans(p, scans)
+    by_table: dict = {}
+    for key, node in scans.items():
+        if key in ex._memo:
+            continue
+        t = node.args["table"]
+        if hasattr(t, "_scan_batch"):
+            by_table.setdefault(id(t), []).append((key, node))
+    for group in by_table.values():
+        if len(group) < 2:
+            continue            # nothing to amortize
+        table = group[0][1].args["table"]
+        sels = [(n.args["rsel"], n.args["csel"]) for _, n in group]
+        results = table._scan_batch(sels)
+        for (key, _), a in zip(group, results):
+            if a is not None:
+                ex._memo[key] = a
+
+
+def _chain_parts(node: LazyAssoc):
+    """[A, B, ..., x] for a left-spine matmul chain root; None else."""
+    if node.op != "matmul":
+        return None
+    parts = []
+    cur = node
+    while cur.op == "matmul":
+        parts.append(cur.children[1])
+        cur = cur.children[0]
+    parts.append(cur)
+    parts.reverse()
+    return parts
+
+
+def _fuse_chain_groups(plans, ex: "_Executor") -> None:
+    """Find matvec chains sharing an identical factor list and execute
+    each group as one SpMM launch, seeding the executor's memo with the
+    per-chain result columns."""
+    groups: dict = {}
+    for p in plans:
+        parts = _chain_parts(p)
+        if parts is None or len(parts) < 2:
+            continue
+        fkey = tuple(_skey(f) for f in parts[:-1])
+        # dedupe by root skey — exact duplicates are already CSE'd
+        groups.setdefault(fkey, {}).setdefault(_skey(p), parts)
+    for chains in groups.values():
+        if len(chains) < 2:
+            continue
+        # factor/tail evaluation goes through the shared executor, so
+        # scans hit the batch-prefetched memo entries
+        any_parts = next(iter(chains.values()))
+        factors = [ex.run(f) for f in any_parts[:-1]]
+        tails = [(rkey, ex.run(parts[-1]))
+                 for rkey, parts in chains.items()]
+        elig = [(rkey, v) for rkey, v in tails
+                if v.col.shape[0] == 1 and v.nnz > 0]
+        if len(elig) < 2:
+            continue
+        outs = _device_matmul_chain_multi(factors, [v for _, v in elig])
+        if outs is None:
+            continue
+        for (rkey, _), out in zip(elig, outs):
+            ex._memo[rkey] = out
+
+
+def _device_matmul_chain_multi(factors, vecs) -> Optional[list]:
+    """Lower N chains A @ B @ ... @ x_j (identical factors, different
+    vectors) to successive device SpMMs over the stacked multi-vector
+    X = [x_1 … x_N]: every factor streams from HBM once for the whole
+    batch.  Column j of the zero-padded X reproduces chain j exactly
+    under plus_times (padding zeros contribute nothing), so each result
+    column equals its chain's :func:`_device_matmul_chain` output.
+    Returns None when ineligible (empty factor, or all factors below
+    DEVICE_NNZ_THRESHOLD) so the callers fall back per chain."""
+    import jax.numpy as jnp
+    if any(f.nnz == 0 for f in factors):
+        return None
+    if max(f.nnz for f in factors) < DEVICE_NNZ_THRESHOLD:
+        return None
+    y_keys = vecs[0].row
+    for v in vecs[1:]:
+        y_keys = np.union1d(y_keys, v.row)
+    b = len(vecs)
+    X = np.zeros((y_keys.shape[0], b), np.float32)
+    for j, v in enumerate(vecs):
+        idx = np.searchsorted(y_keys, v.row)    # v.row ⊆ y_keys, sorted
+        X[idx, j] = np.asarray(v._numeric_sm().todense()).ravel()
+    Y = jnp.asarray(X)
+    for F in reversed(factors):
+        inner = np.intersect1d(F.col, y_keys)
+        if inner.size == 0:
+            y_keys = F.row
+            Y = jnp.zeros((F.row.shape[0], b), jnp.float32)
+            continue
+        fsm = F._onto(F.row, inner)
+        idx = np.searchsorted(y_keys, inner)
+        Y = _device_spmm_dev(fsm, jnp.take(Y, jnp.asarray(idx), axis=0))
+        y_keys = F.row
+    Yh = np.asarray(Y, dtype=np.float64)        # single host transfer
+    outs = []
+    for j, v in enumerate(vecs):
+        col = Yh[:, j]
+        sm = S.scipy_from_triples(
+            np.arange(col.shape[0]), np.zeros(col.shape[0], np.int64),
+            col, (col.shape[0], 1))
+        sm.eliminate_zeros()
+        outs.append(Assoc._from_parts(y_keys, v.col, None, sm)._compact())
+    return outs

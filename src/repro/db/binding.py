@@ -171,6 +171,11 @@ class ScanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # batch-path probes (a subset of hits/misses): how often a
+        # batched eval was served by / had to populate per-member
+        # entries — the ``eval_batch``↔cache interplay counters.
+        self.batch_hits = 0
+        self.batch_misses = 0
 
     def get(self, key) -> Optional[Assoc]:
         with self._lock:
@@ -299,13 +304,17 @@ class TableStats(dict):
         cache = t._cache or getattr(t.backend, "_scan_cache", None)
         if cache is not None:
             out["cache"] = {"hits": cache.hits, "misses": cache.misses,
+                            "batch_hits": cache.batch_hits,
+                            "batch_misses": cache.batch_misses,
                             "evictions": cache.evictions,
                             "admission_skips": cache.admission_skips,
                             "entries": len(cache),
                             "writes_per_s": cache.writes_per_s,
                             "full_scan_wps_limit": cache.full_scan_wps_limit}
         else:
-            out["cache"] = {"hits": 0, "misses": 0, "evictions": 0,
+            out["cache"] = {"hits": 0, "misses": 0,
+                            "batch_hits": 0, "batch_misses": 0,
+                            "evictions": 0,
                             "admission_skips": 0, "entries": 0,
                             "writes_per_s": 0.0,
                             "full_scan_wps_limit": float("inf")}
@@ -582,6 +591,115 @@ class DBTable:
         axis, atoms = self._band(rsel, ratoms, catoms)
         cache.put(key, out, axis, atoms, ttl=self.cache_ttl, if_version=v0)
         return out
+
+    def _scan_batch(self, sels) -> list:
+        """Serve a batch of subscripts with one union tablet scan per
+        physical route (the ``repro.core.expr.eval_batch`` prefetch
+        hook): members are grouped row/col/deg, their atoms unioned,
+        scanned once, and split per member host-side — each member's
+        result is byte-identical to its individual :meth:`_scan` and
+        lands its own :class:`ScanCache` entry.
+
+        Route counters tick once per *union* scan (that is what hit the
+        tablets); cache hit/miss counters still tick per member, plus
+        the batch-path ``batch_hits``/``batch_misses``.
+
+        Returns a list aligned with ``sels``; ``None`` marks members
+        this table declines to prefetch (ranges, full scans, positional
+        selectors, degree-guard refusals) — they fall back to individual
+        :meth:`_scan`, where any error surfaces on the member that
+        caused it.
+        """
+        self._read_barrier()        # one visibility barrier for the batch
+        out: list = [None] * len(sels)
+        cache = self._cache
+        groups: dict = {"row": [], "col": [], "deg": []}
+        for i, (rsel, csel) in enumerate(sels):
+            try:
+                if self._is_degree:
+                    atoms = _classify(rsel)
+                    if atoms.kind == "atoms":
+                        groups["deg"].append((i, atoms, rsel, csel))
+                    continue
+                ratoms, catoms = _classify(rsel), _classify(csel)
+            except TypeError:
+                continue            # positional — raises in its own _scan
+            if ratoms.kind == "all" and catoms.kind == "atoms":
+                try:
+                    self._degree_guard(catoms)
+                except AccidentalDenseError:
+                    continue        # member re-raises on its own scan
+                groups["col"].append((i, catoms, rsel, csel))
+            elif ratoms.kind == "atoms":
+                groups["row"].append((i, ratoms, rsel, csel))
+        for axis, members in groups.items():
+            if not members:
+                continue
+            misses = []
+            for m in members:
+                i, atoms, rsel, csel = m
+                if cache is not None:
+                    hit = cache.get(
+                        (self.tables, _sel_key(rsel), _sel_key(csel)))
+                    if hit is not None:
+                        self.stats["cache_hit"] += 1
+                        cache.batch_hits += 1
+                        out[i] = hit
+                        continue
+                    cache.batch_misses += 1
+                misses.append(m)
+            if not misses:
+                continue
+            v0 = cache.version if cache is not None else None
+            uatoms = _Atoms(
+                "atoms",
+                keys=tuple(sorted({k for _, a, _, _ in misses
+                                   for k in a.keys})),
+                prefixes=tuple(sorted({p for _, a, _, _ in misses
+                                       for p in a.prefixes})))
+            U = self._scan_union(axis, uatoms)
+            for i, atoms, rsel, csel in misses:
+                A = self._split_member(U, axis, rsel, csel)
+                out[i] = A
+                self.stats["cache_miss"] += 1
+                if cache is not None:
+                    cache.put(
+                        (self.tables, _sel_key(rsel), _sel_key(csel)),
+                        A, "col" if axis == "deg" else axis, atoms,
+                        ttl=self.cache_ttl, if_version=v0)
+        return out
+
+    def _scan_union(self, axis: str, uatoms: _Atoms) -> Assoc:
+        """One tablet scan covering every batch member on a route."""
+        if axis == "deg":
+            self.stats["deg"] += 1
+            items = [(k, self.backend.degree(k)) for k in uatoms.keys]
+            for p in uatoms.prefixes:
+                items.extend(self.backend.degree_items(p))
+            # a key may match both an exact atom and a prefix atom —
+            # dedupe so the split sees each degree once
+            dd = {k: v for k, v in items if v}
+            if not dd:
+                return Assoc()
+            return Assoc(np.asarray(list(dd.keys()), dtype=str), "degree,",
+                         np.asarray(list(dd.values()), dtype=np.float64))
+        if axis == "col":
+            self.stats["col"] += 1
+            return self._assemble(self._iter_cells(uatoms, transpose=True),
+                                  transposed=True)
+        self.stats["row"] += 1
+        return self._assemble(self._iter_cells(uatoms, transpose=False))
+
+    @staticmethod
+    def _split_member(U: Assoc, axis: str, rsel, csel) -> Assoc:
+        """A member's slice of the union scan — equal to its own scan
+        (the union only adds rows/cols the member's selector rejects)."""
+        if U.nnz == 0:
+            return Assoc()
+        if axis == "col":
+            return U[K.All(), csel]
+        A = U[rsel, K.All()]
+        return A if _is_all(csel) else A[K.All(), csel]
 
     def _band(self, rsel, ratoms, catoms) -> tuple:
         """(axis, atoms) describing which written keys invalidate this

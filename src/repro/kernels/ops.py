@@ -12,7 +12,8 @@ import jax
 from .flash_attention import flash_attention
 from .rglru import rglru_scan
 from .segsum import segsum
-from .spmv import csr_to_ell, spmv_ell
+from .spmm import spgemm_sel, spmm_ell
+from .spmv import EllOverflowError, csr_to_ell, spmv_ell
 from .wkv6 import wkv6
 
 
@@ -25,6 +26,7 @@ def default_interpret() -> bool:
 
 
 __all__ = [
-    "segsum", "spmv_ell", "csr_to_ell", "flash_attention", "rglru_scan",
-    "wkv6", "on_tpu", "default_interpret",
+    "segsum", "spmv_ell", "spmm_ell", "spgemm_sel", "csr_to_ell",
+    "EllOverflowError", "flash_attention", "rglru_scan", "wkv6", "on_tpu",
+    "default_interpret",
 ]

@@ -26,6 +26,36 @@ def spmv_ell_ref(ecols: jax.Array, evals: jax.Array, x: jax.Array,
     raise ValueError(ring)
 
 
+def spmm_ell_ref(ecols: jax.Array, evals: jax.Array, x: jax.Array,
+                 ring: str = "plus_times"):
+    """Y[r, j] = ⊕_k evals[r,k] ⊗ x[ecols[r,k], j] (cols == -1 pad)."""
+    xg = jnp.where(ecols[..., None] >= 0,
+                   x[jnp.maximum(ecols, 0)], 0.0)          # (R, K, B)
+    prods = evals[..., None].astype(jnp.float32) * xg.astype(jnp.float32)
+    if ring == "plus_times":
+        return jnp.sum(prods, axis=1)
+    if ring == "max_times":
+        masked = jnp.where(ecols[..., None] >= 0, prods, -jnp.inf)
+        out = jnp.max(masked, axis=1)
+        return jnp.where(jnp.isneginf(out), 0.0, out)
+    raise ValueError(ring)
+
+
+def spgemm_sel_ref(ecols: jax.Array, evals: jax.Array, sel: jax.Array,
+                   ring: str = "plus_times"):
+    """Y[r, j] = ⊕_k evals[r,k] ⊗ [ecols[r,k] == sel[j]] — the masked
+    column-select SpGEMM (one-hot mask matrix, built densely here)."""
+    hit = (ecols[..., None] == sel[None, None, :]) & \
+          (ecols[..., None] >= 0)                          # (R, K, B)
+    vals = evals[..., None].astype(jnp.float32)
+    if ring == "plus_times":
+        return jnp.sum(jnp.where(hit, vals, 0.0), axis=1)
+    if ring == "max_times":
+        out = jnp.max(jnp.where(hit, vals, -jnp.inf), axis=1)
+        return jnp.where(jnp.isneginf(out), 0.0, out)
+    raise ValueError(ring)
+
+
 def flash_attention_ref(q, k, v, causal=True, window=0):
     from ..models import layers as L
     b, sq = q.shape[:2]

@@ -69,15 +69,50 @@ def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, out_ref, *,
     out_ref[...] = acc
 
 
-def csr_to_ell(row_ptr, cols, vals, n_rows: int, k_max: int):
-    """Host-side CSR→ELL pack (pad/truncate to k_max nnz per row) —
-    fully vectorized scatter, no Python row loop."""
+class EllOverflowError(ValueError):
+    """A CSR row holds more entries than the ELL pack's ``k_max``.
+
+    Truncating would silently drop nnz (wrong query answers), so the
+    pack refuses by default.  Raise ``k_max`` (the device lowering uses
+    ``max(nnz per row)``), route the payload through the CSR/COO path
+    instead, or pass ``on_overflow='truncate'`` to accept the loss
+    explicitly (top-k style sketches only).
+    """
+
+    def __init__(self, n_over: int, worst: int, k_max: int):
+        self.n_over = n_over
+        self.worst = worst
+        self.k_max = k_max
+        super().__init__(
+            f"{n_over} row(s) exceed k_max={k_max} (worst row has "
+            f"{worst} nnz): truncation would silently drop entries — "
+            f"raise k_max, use the CSR/COO path, or pass "
+            f"on_overflow='truncate' to accept the loss")
+
+
+def csr_to_ell(row_ptr, cols, vals, n_rows: int, k_max: int,
+               on_overflow: str = "raise"):
+    """Host-side CSR→ELL pack (pad to k_max nnz per row) — fully
+    vectorized scatter, no Python row loop.
+
+    Rows with more than ``k_max`` entries cannot be represented: the
+    default ``on_overflow='raise'`` surfaces :class:`EllOverflowError`
+    instead of silently truncating; ``'truncate'`` keeps the first
+    ``k_max`` entries per row (explicit lossy opt-in).
+    """
+    if on_overflow not in ("raise", "truncate"):
+        raise ValueError(f"on_overflow must be 'raise' or 'truncate', "
+                         f"got {on_overflow!r}")
     row_ptr = np.asarray(row_ptr, dtype=np.int64)
     cols = np.asarray(cols)
     vals = np.asarray(vals)
+    counts = np.diff(row_ptr)
+    if on_overflow == "raise" and counts.size and counts.max() > k_max:
+        over = counts > k_max
+        raise EllOverflowError(int(over.sum()), int(counts.max()), k_max)
     ecols = np.full((n_rows, k_max), -1, np.int32)
     evals = np.zeros((n_rows, k_max), np.float32)
-    keep = np.minimum(np.diff(row_ptr), k_max)
+    keep = np.minimum(counts, k_max)
     total = int(keep.sum())
     if total:
         rows = np.repeat(np.arange(n_rows), keep)

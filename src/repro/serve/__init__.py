@@ -9,12 +9,13 @@ style.  See docs/api.md "Serving gateway".
 """
 from .app import Gateway, main, synthetic_incidence
 from .auth import AuthError, Tenant, TokenAuth
+from .coalesce import QueryCoalescer
 from .jobs import JobQueue, QueueFull, UnknownJob
 from .ratelimit import RateLimited, RateLimiter, TokenBucket
 from .routes import HTTPError, Request, ROUTES
 from .stream import StatsPublisher
 
-__all__ = ["Gateway", "main", "synthetic_incidence",
+__all__ = ["Gateway", "main", "synthetic_incidence", "QueryCoalescer",
            "TokenAuth", "Tenant", "AuthError",
            "RateLimiter", "TokenBucket", "RateLimited",
            "JobQueue", "QueueFull", "UnknownJob",

@@ -40,6 +40,7 @@ from urllib.parse import parse_qs, urlsplit
 from ..db.binding import AccidentalDenseError, DBTable
 from ..db.writer import AsyncWriterError
 from .auth import AuthError, TokenAuth
+from .coalesce import QueryCoalescer
 from .jobs import JobQueue, QueueFull, UnknownJob
 from .ratelimit import RateLimited, RateLimiter
 from .routes import HTTPError, Request, match
@@ -53,7 +54,8 @@ class Gateway:
                  degree_limit: Optional[float] = None,
                  n_job_workers: int = 2, max_queued_jobs: int = 64,
                  job_result_ttl: float = 600.0,
-                 stats_interval: float = 1.0):
+                 stats_interval: float = 1.0,
+                 coalesce_window: float = 0.003):
         # the serving view always runs the densification guard: an
         # interactive endpoint must 413, never OOM the gateway
         if degree_limit is not None:
@@ -64,6 +66,22 @@ class Gateway:
         self.jobs = JobQueue(n_workers=n_job_workers,
                              max_queued=max_queued_jobs,
                              result_ttl=job_result_ttl)
+        # concurrent hot-path queries (topk, column scans) arriving
+        # within this window evaluate as ONE eval_batch — a union
+        # tablet scan + one device launch instead of N (<= 0 disables)
+        self.coalescer = QueryCoalescer(window=coalesce_window)
+        # a degree-table view sharing the main view's counters/cache,
+        # so /v1/topk expresses as a *batchable* lazy TedgeDeg scan
+        if self.table._is_degree:
+            self.deg_table: Optional[DBTable] = self.table
+        elif "TedgeDeg" in self.table.tables:
+            dt = DBTable(self.table.backend, ("TedgeDeg",),
+                         name=self.table.name,
+                         cache_ttl=self.table.cache_ttl)
+            dt.stats = self.table.stats
+            self.deg_table = dt
+        else:
+            self.deg_table = None
         self.publisher = StatsPublisher(table, interval=stats_interval)
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
@@ -262,6 +280,9 @@ def main(argv=None) -> None:
     p.add_argument("--degree-limit", type=float, default=None)
     p.add_argument("--stats-interval", type=float, default=1.0)
     p.add_argument("--job-workers", type=int, default=2)
+    p.add_argument("--coalesce-window", type=float, default=0.003,
+                   help="seconds concurrent hot-path queries wait to "
+                        "batch into one eval (0 disables)")
     p.add_argument("--demo-rows", type=int, default=0,
                    help="ingest ~this many synthetic traffic edges at "
                         "boot (demo/smoke)")
@@ -278,7 +299,8 @@ def main(argv=None) -> None:
     gw = Gateway(T, TokenAuth.from_specs(args.token),
                  degree_limit=args.degree_limit,
                  n_job_workers=args.job_workers,
-                 stats_interval=args.stats_interval)
+                 stats_interval=args.stats_interval,
+                 coalesce_window=args.coalesce_window)
     addr = gw.start(host=args.host, port=args.port)
     print(f"LISTENING {addr}", flush=True)
 

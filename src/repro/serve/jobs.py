@@ -43,7 +43,8 @@ class UnknownJob(KeyError):
 
 class Job:
     __slots__ = ("id", "kind", "tenant", "status", "result", "error",
-                 "submitted_at", "started_at", "finished_at")
+                 "submitted_at", "started_at", "finished_at",
+                 "batch_key", "followers")
 
     def __init__(self, kind: str, tenant: str, clock=time.monotonic):
         self.id = secrets.token_hex(8)
@@ -55,6 +56,10 @@ class Job:
         self.submitted_at = clock()
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
+        self.batch_key: Optional[str] = None
+        # jobs coalesced onto this one while it was queued: they share
+        # its execution and receive copies of its result/status
+        self.followers: list = []
 
     def describe(self) -> dict:
         out = {"job": self.id, "kind": self.kind, "tenant": self.tenant,
@@ -74,6 +79,8 @@ class JobQueue:
         self.clock = clock
         self._q: "queue.Queue" = queue.Queue()
         self._jobs: Dict[str, Job] = {}
+        self._coalesce: Dict[str, Job] = {}     # batch_key → queued primary
+        self.n_coalesced = 0
         self._lock = threading.Lock()
         self._closed = threading.Event()
         self._workers = [
@@ -85,9 +92,18 @@ class JobQueue:
 
     # -- submission / polling ----------------------------------------------
     def submit(self, kind: str, fn: Callable[[], dict],
-               tenant: Tenant) -> Job:
+               tenant: Tenant, batch_key: Optional[str] = None) -> Job:
         """Enqueue ``fn``; raises :class:`QueueFull` when the global or
-        per-tenant bound is hit."""
+        per-tenant bound is hit.
+
+        With a ``batch_key``, identical work coalesces per queue drain:
+        if a job with the same key is still *queued*, the new submission
+        becomes a follower — its own :class:`Job` id (per-tenant bounds
+        still apply), but no second execution; the worker copies the
+        primary's result/status to every follower when it finishes.
+        Running or finished jobs never absorb followers (their snapshot
+        may predate the new request's writes).
+        """
         with self._lock:
             self._sweep_locked()
             live = [j for j in self._jobs.values()
@@ -101,6 +117,14 @@ class JobQueue:
                     f"({tenant.max_jobs})")
             job = Job(kind, tenant.name, clock=self.clock)
             self._jobs[job.id] = job
+            if batch_key is not None:
+                primary = self._coalesce.get(batch_key)
+                if primary is not None and primary.status == "queued":
+                    primary.followers.append(job)
+                    self.n_coalesced += 1
+                    return job          # rides the primary's execution
+                job.batch_key = batch_key
+                self._coalesce[batch_key] = job
         self._q.put((job, fn))
         return job
 
@@ -127,21 +151,34 @@ class JobQueue:
             if item is None:
                 return
             job, fn = item
+            with self._lock:
+                # the drain point: no further followers may attach —
+                # later identical submissions start a fresh primary
+                if job.batch_key is not None:
+                    self._coalesce.pop(job.batch_key, None)
+                group = [job] + job.followers
             if self._closed.is_set():
-                job.status = "failed"
-                job.error = "gateway shutting down"
-                job.finished_at = self.clock()
+                for j in group:
+                    j.status = "failed"
+                    j.error = "gateway shutting down"
+                    j.finished_at = self.clock()
                 continue
-            job.status = "running"
-            job.started_at = self.clock()
+            for j in group:
+                j.status = "running"
+                j.started_at = self.clock()
             try:
-                job.result = fn()
-                job.status = "done"
+                result = fn()
+                for j in group:
+                    j.result = result
+                    j.status = "done"
             except Exception as e:      # surfaced via the status poll
-                job.error = f"{type(e).__name__}: {e}"
-                job.status = "failed"
+                for j in group:
+                    j.error = f"{type(e).__name__}: {e}"
+                    j.status = "failed"
             finally:
-                job.finished_at = self.clock()
+                now = self.clock()
+                for j in group:
+                    j.finished_at = now
 
     def close(self) -> None:
         """Stop the workers; queued-but-unstarted jobs fail fast."""
@@ -157,4 +194,5 @@ class JobQueue:
             for j in self._jobs.values():
                 by_status[j.status] = by_status.get(j.status, 0) + 1
         return {"by_status": by_status, "n_workers": len(self._workers),
-                "max_queued": self.max_queued}
+                "max_queued": self.max_queued,
+                "n_coalesced": self.n_coalesced}

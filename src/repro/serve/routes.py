@@ -114,10 +114,15 @@ def _require(req: Request, name: str) -> str:
 @route("GET", "/v1/topk", cost=1.0)
 def topk(gw, req: Request) -> dict:
     """Top-K talkers straight from the combiner-maintained degree table
-    (TedgeDeg) — never touches the edge tables."""
+    (TedgeDeg) — never touches the edge tables.  Expressed as a lazy
+    TedgeDeg scan through the gateway's coalescer: concurrent topk
+    requests inside one window share a single batched eval."""
     prefix = req.params.get("prefix", "ip.dst|")
     k = _int(req, "k", 10, hi=10_000)
-    deg = gw.table.degree_assoc(prefix)
+    if gw.deg_table is not None:
+        deg = gw.coalescer.eval(gw.deg_table[K.StartsWith(prefix), :])
+    else:
+        deg = gw.table.degree_assoc(prefix)
     r, _, v = deg.triples()
     v = np.asarray(v, np.float64)
     order = np.argsort(v)[::-1][:k]
@@ -185,6 +190,10 @@ def scan(gw, req: Request) -> dict:
     the scan is full-table and subject to write-rate admission → 429.
     ``max_cells`` truncates the payload (default 10 000) — ``truncated``
     says whether more existed.
+
+    Evaluation goes through the gateway's coalescer: concurrent scans
+    arriving within one window batch into a single union tablet scan
+    (``eval_batch``) — 8 concurrent column readers cost one scan.
     """
     axis = req.params.get("axis", "row")
     if axis not in ("row", "col"):
@@ -198,7 +207,7 @@ def scan(gw, req: Request) -> dict:
         lazy = gw.table[sel, :]
     else:
         lazy = gw.table[:, sel]
-    A = lazy.eval()
+    A = gw.coalescer.eval(lazy)
     r, c, v = A.triples()
     n = int(r.shape[0])
     cut = min(n, max_cells)
@@ -243,13 +252,19 @@ def _job_fns(gw, params: dict) -> Dict[str, Callable[[], dict]]:
 
 @route("POST", "/v1/jobs", cost=2.0)
 def submit_job(gw, req: Request) -> dict:
+    """Enqueue a long analytic.  Identical (kind, params) submissions
+    arriving while a matching job is still queued coalesce onto one
+    execution per queue drain — each caller keeps its own job id."""
+    import json
     body = req.body or {}
     kind = body.get("kind")
-    fns = _job_fns(gw, body.get("params") or {})
+    params = body.get("params") or {}
+    fns = _job_fns(gw, params)
     if kind not in fns:
         raise HTTPError(400, f"unknown job kind {kind!r}; "
                              f"one of {sorted(fns)}")
-    job = gw.jobs.submit(kind, fns[kind], req.tenant)
+    bkey = json.dumps({"kind": kind, "params": params}, sort_keys=True)
+    job = gw.jobs.submit(kind, fns[kind], req.tenant, batch_key=bkey)
     return job.describe()
 
 
@@ -275,9 +290,12 @@ def job_result(gw, req: Request, id: str) -> dict:
 def stats(gw, req: Request) -> dict:
     """The unified counter snapshot: table (routes/cache/writers/backend)
     + rate limiter + job queue + the stream's latest windowed sample."""
+    from ..core.expr import launch_counts
     return {"table": to_jsonable(gw.table.stats()),
             "ratelimit": gw.limiter.stats(),
             "jobs": gw.jobs.stats(),
+            "coalesce": gw.coalescer.stats(),
+            "kernel_launches": launch_counts(),
             "stream": gw.publisher.latest()}
 
 

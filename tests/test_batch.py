@@ -1,0 +1,279 @@
+"""Batched evaluation: eval_batch planner fusion (N chains → one SpMM
+launch), DBTable._scan_batch union scans + ScanCache interplay, the
+gateway QueryCoalescer, and job-queue batch_key dedup."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Assoc, StartsWith, eval_batch, lazy, lazy_batch
+from repro.core import keys as K
+from repro.core import expr as X
+from repro.db import DB, AccidentalDenseError, put
+from repro.serve import QueryCoalescer
+from repro.serve.auth import Tenant
+from repro.serve.jobs import JobQueue
+
+
+def small_incidence():
+    rows = "p1,p1,p2,p2,p3,p3,p4,p4,"
+    cols = ("ip.src|a,ip.dst|b,ip.src|a,ip.dst|c,"
+            "ip.src|d,ip.dst|b,ip.src|a,ip.dst|b,")
+    return Assoc(rows, cols, "1,1,1,1,1,1,1,1,")
+
+
+def random_graph(n=200, nnz=2000, seed=1):
+    rng = np.random.default_rng(seed)
+    rows = np.asarray([f"v{i:04d}" for i in rng.integers(0, n, nnz)],
+                      dtype=str)
+    cols = np.asarray([f"v{i:04d}" for i in rng.integers(0, n, nnz)],
+                      dtype=str)
+    return Assoc(rows, cols, np.ones(nnz))
+
+
+def seed_vec(j):
+    return Assoc(np.asarray([f"v{j:04d}"]), np.asarray([f"seed{j}"]),
+                 np.asarray([1.0]))
+
+
+class TestEvalBatchScans:
+    def test_col_batch_matches_individual(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        sels = ["ip.dst|b,", "ip.src|a,ip.src|d,", StartsWith("ip.dst|")]
+        got = eval_batch([T[:, s] for s in sels])
+        for s, g in zip(sels, got):
+            assert g == T._scan(None, s)
+        # the whole batch hit the tablets through ONE union col scan
+        assert T.stats["col"] == 1
+        assert T.stats["cache_miss"] == 3
+
+    def test_row_batch_matches_individual(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        pairs = [("p1,p2,", None), (StartsWith("p"), None),
+                 ("p3,", "ip.dst|*,")]
+        got = eval_batch([T[r, c] for r, c in pairs])
+        for (r, c), g in zip(pairs, got):
+            assert g == T._scan(r, c)
+        assert T.stats["row"] == 1
+
+    def test_degree_batch_matches_individual(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        Td = DB("TedgeDeg", backend=T.backend)
+        sels = ["ip.dst|b,ip.dst|c,", StartsWith("ip.src|")]
+        got = eval_batch([Td[s, :] for s in sels])
+        for s, g in zip(sels, got):
+            assert g == Td._scan(s, None)
+
+    def test_batch_populates_and_hits_cache(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        cache = T._cache
+        sels = ["ip.dst|b,", "ip.dst|c,", "ip.src|a,"]
+        eval_batch([T[:, s] for s in sels])
+        assert cache.batch_misses == 3 and cache.batch_hits == 0
+        # a batch member's entry serves a later SINGLE query...
+        assert T[:, "ip.dst|b,"].eval() == T._scan(None, "ip.dst|b,")
+        assert cache.hits >= 2       # the eval + the _scan both hit
+        # ...and a cached single query serves a later batch member
+        hits0 = cache.batch_hits
+        eval_batch([T[:, s] for s in sels])
+        assert cache.batch_hits == hits0 + 3
+        assert T.stats()["cache"]["batch_hits"] == cache.batch_hits
+        assert T.stats()["cache"]["batch_misses"] == cache.batch_misses
+
+    def test_guarded_member_raises_alone(self):
+        """A member refused by the degree guard must not poison the
+        batch prefetch — it raises when IT evaluates."""
+        T = DB("Tedge", "TedgeT", "TedgeDeg", degree_limit=2.0)
+        put(T, small_incidence())
+        exprs = [T[:, "ip.dst|b,"], T[:, "ip.dst|c,"]]
+        with pytest.raises(AccidentalDenseError):
+            eval_batch(exprs)            # deg(ip.dst|b) == 3 > 2
+        # the safe member alone is fine
+        ok = eval_batch([T[:, "ip.dst|c,"], T[:, "ip.src|d,"]])
+        assert ok[0] == T.with_degree_limit(None)._scan(None, "ip.dst|c,")
+
+    def test_duplicate_members_cse(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        a, b = eval_batch([T[:, "ip.dst|b,"], T[:, "ip.dst|b,"]])
+        assert a == b
+        assert T.stats["col"] == 1
+
+    def test_lazy_batch_wraps(self):
+        A = small_incidence()
+        nodes = lazy_batch([A, lazy(A).logical()])
+        got = eval_batch(nodes)
+        assert got[0] == A and got[1] == A.logical()
+
+
+class TestSpmmChainFusion:
+    def _setup(self, monkeypatch, n_chains=8):
+        monkeypatch.setattr(X, "DEVICE_NNZ_THRESHOLD", 1)
+        T = DB("Tedge", "TedgeT")
+        put(T, random_graph())
+        exprs = [T.lazy() * lazy(seed_vec(j)) for j in range(n_chains)]
+        return T, exprs
+
+    def test_n_chains_one_launch(self, monkeypatch):
+        """The acceptance criterion: N matvec chains over the same
+        table scan execute as ONE fused SpMM launch, not N SpMVs."""
+        T, exprs = self._setup(monkeypatch)
+        c0 = X.launch_counts()
+        got = eval_batch(exprs)
+        c1 = X.launch_counts()
+        assert c1["spmm"] - c0["spmm"] == 1
+        assert c1["spmv"] - c0["spmv"] == 0
+        # ...and every fused column equals its solo evaluation
+        for j, g in enumerate(got):
+            solo = (T.lazy() * lazy(seed_vec(j))).eval()
+            assert g == solo
+
+    def test_two_factor_chains_two_launches(self, monkeypatch):
+        T, _ = self._setup(monkeypatch)
+        exprs = [T.lazy() * T.lazy() * lazy(seed_vec(j)) for j in range(4)]
+        c0 = X.launch_counts()
+        got = eval_batch(exprs)
+        c1 = X.launch_counts()
+        assert c1["spmm"] - c0["spmm"] == 2      # one per factor
+        assert c1["spmv"] - c0["spmv"] == 0
+        for j, g in enumerate(got):
+            assert g == (T.lazy() * T.lazy() * lazy(seed_vec(j))).eval()
+
+    def test_pallas_spmm_path(self, monkeypatch):
+        monkeypatch.setattr(X, "USE_PALLAS_SPMV", True)
+        T, exprs = self._setup(monkeypatch, n_chains=4)
+        c0 = X.launch_counts()
+        got = eval_batch(exprs)
+        assert X.launch_counts()["spmm"] - c0["spmm"] == 1
+        monkeypatch.setattr(X, "USE_PALLAS_SPMV", False)
+        for j, g in enumerate(got):
+            assert g == (T.lazy() * lazy(seed_vec(j))).eval()
+
+    def test_single_chain_not_fused(self, monkeypatch):
+        T, exprs = self._setup(monkeypatch, n_chains=1)
+        c0 = X.launch_counts()
+        eval_batch(exprs)
+        assert X.launch_counts()["spmm"] - c0["spmm"] == 0
+
+    def test_below_threshold_stays_on_host(self, monkeypatch):
+        """Small payloads keep the host path (and its f64 precision)."""
+        monkeypatch.setattr(X, "DEVICE_NNZ_THRESHOLD", 10 ** 9)
+        T = DB("Tedge", "TedgeT")
+        put(T, random_graph())
+        exprs = [T.lazy() * lazy(seed_vec(j)) for j in range(4)]
+        c0 = X.launch_counts()
+        got = eval_batch(exprs)
+        c1 = X.launch_counts()
+        assert c1["spmm"] - c0["spmm"] == 0
+        assert c1["spmv"] - c0["spmv"] == 0
+        for j, g in enumerate(got):
+            assert g == (T.lazy() * lazy(seed_vec(j))).eval()
+
+
+class TestQueryCoalescer:
+    def test_concurrent_requests_one_batch(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        qc = QueryCoalescer(window=0.05)
+        sels = ["ip.dst|b,", "ip.dst|c,", "ip.src|a,", "ip.src|d,"]
+        results = [None] * len(sels)
+
+        def worker(i):
+            results[i] = qc.eval(T[:, sels[i]])
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(sels))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        st = qc.stats()
+        assert st["n_batches"] == 1 and st["n_coalesced"] == len(sels)
+        for i, s in enumerate(sels):
+            assert results[i] == T._scan(None, s)
+
+    def test_disabled_window_is_solo(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg")
+        put(T, small_incidence())
+        qc = QueryCoalescer(window=0.0)
+        out = qc.eval(T[:, "ip.dst|b,"])
+        assert out == T._scan(None, "ip.dst|b,")
+        assert qc.stats()["n_solo"] == 1 and qc.stats()["n_batches"] == 0
+
+    def test_poisoned_member_fails_alone(self):
+        T = DB("Tedge", "TedgeT", "TedgeDeg", degree_limit=2.0)
+        put(T, small_incidence())
+        qc = QueryCoalescer(window=0.05)
+        errs, oks = [None], [None]
+
+        def bad():
+            try:
+                qc.eval(T[:, "ip.dst|b,"])      # deg 3 > limit 2
+            except AccidentalDenseError as e:
+                errs[0] = e
+
+        def good():
+            oks[0] = qc.eval(T[:, "ip.dst|c,"])
+
+        tb, tg = threading.Thread(target=bad), threading.Thread(target=good)
+        tb.start(), tg.start()
+        tb.join(), tg.join()
+        assert isinstance(errs[0], AccidentalDenseError)
+        assert oks[0] == T.with_degree_limit(None)._scan(None, "ip.dst|c,")
+
+
+class TestJobCoalescing:
+    def test_queued_duplicates_share_one_execution(self):
+        q = JobQueue(n_workers=1)
+        tenant = Tenant("a", rate=100.0, burst=100.0)
+        gate = threading.Event()
+        runs = []
+
+        def slow():
+            gate.wait(5)
+            runs.append(1)
+            return {"n": len(runs)}
+
+        blocker = q.submit("blk", lambda: gate.wait(5) or {}, tenant)
+        a = q.submit("fit", slow, tenant, batch_key="fit|{}")
+        b = q.submit("fit", slow, tenant, batch_key="fit|{}")
+        c = q.submit("fit", slow, tenant, batch_key="fit|{}")
+        assert b.id != a.id and c.id != a.id     # own ids, shared run
+        gate.set()
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            if all(j.status == "done" for j in (blocker, a, b, c)):
+                break
+            time.sleep(0.01)
+        assert a.status == b.status == c.status == "done"
+        assert len(runs) == 1                    # ONE execution
+        assert a.result == b.result == c.result
+        assert q.n_coalesced == 2
+        assert q.stats()["n_coalesced"] == 2
+        q.close()
+
+    def test_finished_job_never_absorbs(self):
+        q = JobQueue(n_workers=1)
+        tenant = Tenant("a", rate=100.0, burst=100.0)
+        runs = []
+
+        def fn():
+            runs.append(1)
+            return {"n": len(runs)}
+
+        a = q.submit("fit", fn, tenant, batch_key="k")
+        deadline = time.monotonic() + 5
+        while a.status != "done" and time.monotonic() < deadline:
+            time.sleep(0.01)
+        b = q.submit("fit", fn, tenant, batch_key="k")
+        deadline = time.monotonic() + 5
+        while b.status != "done" and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert len(runs) == 2                    # fresh snapshot re-runs
+        assert a.result != b.result
+        q.close()

@@ -4,11 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rglru import rglru_scan
 from repro.kernels.segsum import segsum
-from repro.kernels.spmv import csr_to_ell, spmv_ell
+from repro.kernels.spmm import spgemm_sel, spmm_ell
+from repro.kernels.spmv import EllOverflowError, csr_to_ell, spmv_ell
 from repro.kernels.wkv6 import wkv6
 
 
@@ -76,7 +78,7 @@ class TestSpmvEll:
 
     def test_csr_to_ell_matches_row_loop(self):
         """The vectorized pack must equal the per-row reference,
-        including k_max truncation and empty rows."""
+        including explicit k_max truncation and empty rows."""
         rng = np.random.default_rng(7)
         n_rows, n_cols, k_max = 50, 80, 4
         counts = rng.integers(0, 9, n_rows)     # some rows exceed k_max
@@ -84,7 +86,8 @@ class TestSpmvEll:
         nnz = int(row_ptr[-1])
         cols = rng.integers(0, n_cols, nnz)
         vals = rng.normal(0, 1, nnz)
-        ecols, evals = csr_to_ell(row_ptr, cols, vals, n_rows, k_max)
+        ecols, evals = csr_to_ell(row_ptr, cols, vals, n_rows, k_max,
+                                  on_overflow="truncate")
         ref_c = np.full((n_rows, k_max), -1, np.int32)
         ref_v = np.zeros((n_rows, k_max), np.float32)
         for r in range(n_rows):
@@ -94,6 +97,26 @@ class TestSpmvEll:
             ref_v[r, :hi - lo] = vals[lo:hi]
         np.testing.assert_array_equal(np.asarray(ecols), ref_c)
         np.testing.assert_allclose(np.asarray(evals), ref_v, rtol=1e-6)
+
+    def test_csr_to_ell_overflow_raises(self):
+        """Silent nnz loss is a wrong query answer: a row with more
+        than k_max entries must raise by default, not truncate."""
+        row_ptr = np.asarray([0, 5, 6])         # row 0 has 5 nnz
+        cols = np.asarray([0, 1, 2, 3, 4, 0])
+        vals = np.ones(6)
+        with pytest.raises(EllOverflowError) as ei:
+            csr_to_ell(row_ptr, cols, vals, 2, k_max=3)
+        assert ei.value.n_over == 1
+        assert ei.value.worst == 5
+        assert ei.value.k_max == 3
+        assert "on_overflow='truncate'" in str(ei.value)
+        # fits → no raise; explicit truncate opt-in → lossy pack
+        csr_to_ell(row_ptr, cols, vals, 2, k_max=5)
+        ecols, _ = csr_to_ell(row_ptr, cols, vals, 2, k_max=3,
+                              on_overflow="truncate")
+        assert int((np.asarray(ecols) >= 0).sum()) == 4
+        with pytest.raises(ValueError, match="on_overflow"):
+            csr_to_ell(row_ptr, cols, vals, 2, k_max=3, on_overflow="warn")
 
     @pytest.mark.parametrize("br,bc", [(32, 64), (8, 16)])
     def test_max_times_signed(self, br, bc):
@@ -126,6 +149,147 @@ class TestSpmvEll:
             np.asarray(ref.spmv_ell_ref(ecols_j, evals_j, x,
                                         ring="max_times")),
             expect, rtol=1e-4, atol=1e-4)
+
+
+def _rand_ell(rng, R, C, K, empty_rows=()):
+    """A random hypersparse ELL block with padding slots and optionally
+    some entirely empty rows."""
+    ecols = np.asarray(rng.integers(-1, C, (R, K)), np.int32)
+    evals = rng.normal(0, 1, (R, K)).astype(np.float32)
+    for r in empty_rows:
+        ecols[r] = -1
+    evals[ecols == -1] = 0.0
+    return jnp.asarray(ecols), jnp.asarray(evals)
+
+
+class TestSpmmEll:
+    @pytest.mark.parametrize("R,C,K,B,br,bc", [
+        (64, 256, 4, 8, 32, 64),
+        (100, 500, 6, 16, 32, 128),
+        (13, 40, 2, 3, 8, 16),          # ragged, tiny batch
+    ])
+    @pytest.mark.parametrize("ring", ["plus_times", "max_times"])
+    def test_matches_ref(self, R, C, K, B, br, bc, ring):
+        rng = np.random.default_rng(R + B)
+        ecols, evals = _rand_ell(rng, R, C, K, empty_rows=(0, R // 2))
+        x = jnp.asarray(rng.normal(0, 1, (C, B)).astype(np.float32))
+        out = spmm_ell(ecols, evals, x, block_rows=br, block_cols=bc,
+                       ring=ring)
+        exp = ref.spmm_ell_ref(ecols, evals, x, ring=ring)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-4, atol=1e-4)
+        # empty rows resolve to the sparse no-entry value, both rings
+        np.testing.assert_allclose(np.asarray(out[0]), 0.0)
+
+    def test_b1_degenerates_to_spmv(self):
+        """A batch of one is exactly the SpMV loop's unit."""
+        rng = np.random.default_rng(5)
+        R, C, K = 48, 120, 3
+        ecols, evals = _rand_ell(rng, R, C, K)
+        x = jnp.asarray(rng.normal(0, 1, C).astype(np.float32))
+        for ring in ("plus_times", "max_times"):
+            ym = spmm_ell(ecols, evals, x[:, None], block_rows=16,
+                          block_cols=32, ring=ring)
+            yv = spmv_ell(ecols, evals, x, block_rows=16, block_cols=32,
+                          ring=ring)
+            np.testing.assert_allclose(np.asarray(ym[:, 0]),
+                                       np.asarray(yv),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_max_times_signed_not_clamped(self):
+        """All-negative products must survive: the accumulator identity
+        is -inf, and cross-tile maxes must not see a 0 floor."""
+        rng = np.random.default_rng(3)
+        R, C, K, B = 24, 96, 3, 4
+        ecols, evals = _rand_ell(rng, R, C, K)
+        evals = jnp.where(ecols >= 0, -jnp.abs(evals) - 0.5, 0.0)
+        x = jnp.asarray(np.abs(rng.normal(0, 1, (C, B))).astype(
+            np.float32) + 0.1)
+        out = np.asarray(spmm_ell(ecols, evals, x, block_rows=8,
+                                  block_cols=16, ring="max_times"))
+        exp = np.asarray(ref.spmm_ell_ref(ecols, evals, x,
+                                          ring="max_times"))
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+        nonempty = np.asarray((ecols >= 0).any(axis=1))
+        assert (out[nonempty] < 0).all()
+
+    def test_rejects_1d_x(self):
+        ecols = jnp.zeros((4, 2), jnp.int32)
+        evals = jnp.zeros((4, 2), jnp.float32)
+        with pytest.raises(ValueError, match="n_cols, b"):
+            spmm_ell(ecols, evals, jnp.zeros(8), block_rows=4,
+                     block_cols=8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 60), st.integers(1, 120), st.integers(1, 5),
+           st.integers(1, 9), st.integers(0, 2 ** 31 - 1),
+           st.sampled_from(["plus_times", "max_times"]))
+    def test_property_random_hypersparse(self, R, C, K, B, seed, ring):
+        """Kernel == oracle over arbitrary hypersparse blocks: any
+        shape, any padding pattern, ragged vs block sizes, both rings."""
+        rng = np.random.default_rng(seed)
+        ecols, evals = _rand_ell(
+            rng, R, C, K,
+            empty_rows=tuple(rng.integers(0, R, max(R // 7, 1))))
+        x = jnp.asarray(rng.normal(0, 1, (C, B)).astype(np.float32))
+        out = spmm_ell(ecols, evals, x, block_rows=16, block_cols=32,
+                       ring=ring)
+        exp = ref.spmm_ell_ref(ecols, evals, x, ring=ring)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestSpgemmSel:
+    @pytest.mark.parametrize("R,C,K,B,br", [
+        (64, 256, 4, 8, 32),
+        (100, 64, 6, 5, 16),
+        (13, 40, 2, 3, 8),
+    ])
+    @pytest.mark.parametrize("ring", ["plus_times", "max_times"])
+    def test_matches_ref(self, R, C, K, B, br, ring):
+        rng = np.random.default_rng(R * B)
+        ecols, evals = _rand_ell(rng, R, C, K, empty_rows=(0,))
+        sel = jnp.asarray(rng.choice(C, B, replace=False), jnp.int32)
+        out = spgemm_sel(ecols, evals, sel, block_rows=br, ring=ring)
+        exp = ref.spgemm_sel_ref(ecols, evals, sel, ring=ring)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_equals_spmm_with_onehot(self):
+        """The masked SpGEMM is SpMM against the one-hot selection
+        matrix — without ever materializing it.  Exact under
+        plus_times; under max_times only for non-negative payloads
+        (dense one-hot zeros enter the max, the sparse mask does not —
+        the mask is the GraphBLAS-correct reduction over stored hits)."""
+        rng = np.random.default_rng(17)
+        R, C, K, B = 40, 80, 3, 6
+        ecols, evals = _rand_ell(rng, R, C, K)
+        sel_np = rng.choice(C, B, replace=False)
+        sel = jnp.asarray(sel_np, jnp.int32)
+        onehot = np.zeros((C, B), np.float32)
+        onehot[sel_np, np.arange(B)] = 1.0
+        ys = spgemm_sel(ecols, evals, sel, block_rows=8)
+        ym = spmm_ell(ecols, evals, jnp.asarray(onehot),
+                      block_rows=8, block_cols=16)
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ym),
+                                   rtol=1e-5, atol=1e-5)
+        evals_pos = jnp.where(ecols >= 0, jnp.abs(evals), 0.0)
+        ys = spgemm_sel(ecols, evals_pos, sel, block_rows=8,
+                        ring="max_times")
+        ym = spmm_ell(ecols, evals_pos, jnp.asarray(onehot),
+                      block_rows=8, block_cols=16, ring="max_times")
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ym),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_max_times_negative_hits_survive(self):
+        """A column whose only stored entries are negative must return
+        the negative max — the sparse mask never lets a dense zero
+        clamp it."""
+        ecols = jnp.asarray([[0, 1, -1]], jnp.int32)
+        evals = jnp.asarray([[-2.0, -3.0, 0.0]], jnp.float32)
+        out = spgemm_sel(ecols, evals, jnp.asarray([0, 1, 5], jnp.int32),
+                         block_rows=8, ring="max_times")
+        np.testing.assert_allclose(np.asarray(out[0]), [-2.0, -3.0, 0.0])
 
 
 class TestFlashAttention:
