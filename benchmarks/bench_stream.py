@@ -1,0 +1,158 @@
+"""Streaming analytics benchmarks: what the always-on path costs.
+
+The design constraint from docs/api.md "Streaming analytics": the
+rollup tap rides the WriterPool worker loop, so its cost lands on the
+ingest path — it must stay a small fraction of the write cost itself.
+
+* ``stream_ingest_base/tapped`` — the same scenario blocks through
+  async ingest with and without a ``TemporalRollup`` tap attached,
+  measured as interleaved base/tapped pairs (median of per-pair
+  ratios, so per-process drift cancels); ``stream_tap_overhead``
+  asserts the attached run stays within 10% (full mode; smoke-sized
+  runs get a noise allowance) of the untapped baseline.
+* ``stream_rollup_rate`` — raw ``TemporalRollup.ingest`` throughput
+  (cells/s), no store underneath: the tap's own ceiling.
+* ``stream_detector_per_window`` — full ``DetectorBank`` pass (SPC +
+  scan + beacon sweeps) amortized per closed window, on a scenario with
+  all three attack kinds firing.
+* ``stream_root_cause`` — one reversed personalized-PageRank
+  localization over an attack window slice.
+
+Writes ``BENCH_stream.json`` via the shared trajectory writer.
+"""
+from __future__ import annotations
+
+import time
+
+from .common import emit, smoke, timeit, write_trajectory
+
+
+def _scenario_cfg():
+    from repro.stream import AttackSpec, ScenarioConfig
+    dur = 30.0 if smoke() else 120.0
+    rate = 60.0 if smoke() else 150.0
+    return ScenarioConfig(
+        duration_s=dur, n_hosts=64, base_rate=rate, seed=7,
+        attacks=(
+            AttackSpec("c2", start=2, duration=dur - 5, n_hosts=6,
+                       period_s=2.0),
+            AttackSpec("scan", start=dur * 0.3, duration=5, rate=60.0),
+            AttackSpec("ddos", start=dur * 0.6, duration=5, n_hosts=8,
+                       rate=40.0),
+        ))
+
+
+def ingest_overhead_main() -> None:
+    from repro.db import DB
+    from repro.stream import TemporalRollup, stream_blocks
+
+    cfg = _scenario_cfg()
+    blocks = list(stream_blocks(cfg))
+    n_cells = sum(A.nnz for _, A in blocks)
+
+    def run(tapped: bool, verify: bool = False) -> float:
+        T = DB("Tedge", "TedgeT", "TedgeDeg", tablets_per_instance=2)
+        if tapped:
+            roll = TemporalRollup()
+            T.add_ingest_tap(roll.ingest)
+        t0 = time.perf_counter()
+        for _, A in blocks:
+            T.put(A, sync=False)
+        T.flush()
+        dt = time.perf_counter() - t0
+        if verify:
+            # the tap saw exactly what the store did, or the number is
+            # measuring a broken rollup (checked once, outside timing —
+            # totals() folds degree sketches, which is read-path work)
+            assert roll.totals("second")["n_cells"] == n_cells
+        T.close()
+        return dt
+
+    # interleaved base/tapped pairs, summed: the two runs of a pair see
+    # the same process state (allocator, caches), so slow per-process
+    # drift cancels instead of landing on whichever variant runs last,
+    # and summing over pairs averages out per-run scheduling noise
+    # (~±6%, larger than the tap signal itself on a single pair)
+    run(True, verify=True)                       # warmup + correctness
+    n_pairs = 3 if smoke() else 8
+    pairs = [(run(False), run(True)) for _ in range(n_pairs)]
+    base = sum(b for b, _ in pairs) / n_pairs
+    tap = sum(t for _, t in pairs) / n_pairs
+    overhead = tap / base - 1.0
+    emit("stream_ingest_base", base / len(blocks) * 1e6,
+         f"cells={n_cells}", cells=n_cells, n_blocks=len(blocks),
+         wall_s=round(base, 4))
+    emit("stream_ingest_tapped", tap / len(blocks) * 1e6,
+         f"overhead={overhead * 100:.1f}%", wall_s=round(tap, 4),
+         overhead_frac=round(overhead, 4))
+    emit("stream_tap_overhead", overhead * 100.0,
+         f"cells_per_s={n_cells / tap:.0f}")
+    # smoke-sized runs are noise-dominated (sub-second walls); the 10%
+    # budget is asserted at full size, smoke gets an allowance
+    limit = 0.50 if smoke() else 0.10
+    assert overhead < limit, \
+        f"ingest tap overhead {overhead * 100:.1f}% exceeds " \
+        f"{limit * 100:.0f}% budget"
+
+
+def rollup_rate_main() -> None:
+    from repro.stream import TemporalRollup, stream_blocks
+
+    blocks = [A.triples() for _, A in stream_blocks(_scenario_cfg())]
+    n_cells = sum(r.shape[0] for r, _, _ in blocks)
+
+    def run() -> None:
+        roll = TemporalRollup()
+        for r, c, v in blocks:
+            roll.ingest(r, c, v)
+        roll.close_due(force=True)
+
+    dt = timeit(run, repeat=3)
+    emit("stream_rollup_rate", dt / len(blocks) * 1e6,
+         f"cells_per_s={n_cells / dt:.0f}", cells_per_s=n_cells / dt)
+
+
+def detector_main() -> None:
+    from repro.stream import DetectorBank, TemporalRollup, root_cause, \
+        scenario_truth, stream_blocks
+
+    cfg = _scenario_cfg()
+    truth = scenario_truth(cfg)
+
+    # warm the jit'd scoring cores out-of-band, then measure one cold
+    # detector pass over every closed window
+    for _ in range(2):
+        roll = TemporalRollup()
+        for _, A in stream_blocks(cfg):
+            roll.ingest(*A.triples())
+        bank = DetectorBank(roll)
+        t0 = time.perf_counter()
+        alerts = bank.process(force=True)
+        dt = time.perf_counter() - t0
+    n_windows = bank.stats()["n_windows"]
+    assert n_windows > 0 and alerts
+    emit("stream_detector_per_window", dt / n_windows * 1e6,
+         f"windows={n_windows} alerts={len(alerts)}",
+         n_windows=n_windows, n_alerts=len(alerts),
+         wall_s=round(dt, 4))
+
+    # one localization, few power iterations: the sharded SpMV loop
+    # pays per-iteration dispatch overhead, so this is wall-dominated
+    # by the mesh round-trips, not the tiny window graph
+    att = truth["attacks"][2]            # the ddos
+    rc_dt = timeit(lambda: root_cause(
+        roll, att["start"] - 1.0, att["stop"] + 1.0,
+        [att["victim"]], top_k=3, num_iters=10), repeat=1)
+    emit("stream_root_cause", rc_dt * 1e6,
+         f"hosts={len(att['attackers'])}")
+
+
+def main() -> None:
+    ingest_overhead_main()
+    rollup_rate_main()
+    detector_main()
+    write_trajectory("stream")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@ docstring for the paper artifact it reproduces):
                            chunk-streamed scans, sync barrier)
 * bench_analytics        — §III-A (device-side graph algebra)
 * bench_kernels          — Pallas kernels vs oracles
+* bench_stream           — streaming rollup tap overhead + detector
+                           latency per closed window
 """
 from __future__ import annotations
 
@@ -22,11 +24,12 @@ import traceback
 def main() -> None:
     from . import (bench_analytics, bench_expansion, bench_ingest,
                    bench_kernels, bench_loc, bench_lsm, bench_net,
-                   bench_pipeline_scaling, bench_query, bench_serving)
+                   bench_pipeline_scaling, bench_query, bench_serving,
+                   bench_stream)
     print("name,us_per_call,derived")
     for mod in (bench_loc, bench_expansion, bench_query, bench_ingest,
                 bench_lsm, bench_net, bench_analytics, bench_kernels,
-                bench_serving, bench_pipeline_scaling):
+                bench_serving, bench_stream, bench_pipeline_scaling):
         try:
             mod.main()
         except Exception:

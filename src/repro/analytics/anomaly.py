@@ -49,6 +49,23 @@ class C2Report(NamedTuple):
     from_dict = classmethod(JsonReportMixin.from_dict.__func__)
 
 
+class C2Scores(NamedTuple):
+    """The full (unsorted) per-destination score table — what
+    :func:`c2_scores` computes over any Queryable, including an
+    in-memory windowed sub-Assoc.  :func:`detect_c2` is a sort + top-k
+    view of this; the streaming beacon detector thresholds it per
+    window instead of rescanning a table."""
+    hosts: np.ndarray          # every dst key seen (stripped of prefix)
+    scores: np.ndarray
+    fanin: np.ndarray
+    regularity: np.ndarray
+    port_conc: np.ndarray
+
+    to_dict = JsonReportMixin.to_dict
+    to_json = JsonReportMixin.to_json
+    from_dict = classmethod(JsonReportMixin.from_dict.__func__)
+
+
 class ScanReport(NamedTuple):
     """``scan_detect`` hits plus the threshold they cleared — the
     JSON-serializable shape the gateway's ``/v1/scanners`` route ships."""
@@ -85,9 +102,12 @@ def _fuse(fanin, regularity, port_conc, total_pkts):
     return jnp.log1p(fanin) * regularity * port_conc * port_conc
 
 
-def detect_c2(E: Queryable, sep: str = "|", top_k: int = 10) -> C2Report:
-    """Run the fused detector over an incidence matrix (stage-5 output)
-    or directly over the database through a :class:`DBTable` binding."""
+def c2_scores(E: Queryable, sep: str = "|") -> C2Scores:
+    """The fused detector's scoring core over *any* Queryable — a live
+    :class:`DBTable`, a deferred :class:`LazyAssoc`, or an in-memory
+    windowed sub-:class:`Assoc` (the streaming path: the rollup hands a
+    window slice straight to this, no table rescan).  Returns the whole
+    score table, unsorted."""
     Edst = E[:, StartsWith(f"ip.dst{sep}")]
     Esrc = E[:, StartsWith(f"ip.src{sep}")]
     Etime = E[:, StartsWith(f"frame.time{sep}")]
@@ -166,15 +186,25 @@ def detect_c2(E: Queryable, sep: str = "|", top_k: int = 10) -> C2Report:
                              jnp.asarray(regularity, jnp.float32),
                              jnp.asarray(conc, jnp.float32),
                              jnp.asarray(total_pkts, jnp.float32)))
-    order = np.argsort(fused)[::-1][:top_k]
-    return C2Report(dst_keys[order], fused[order], fanin[order],
-                    regularity[order], conc[order])
+    return C2Scores(dst_keys, fused, fanin, regularity, conc)
 
 
-def scan_detect(E: Queryable, sep: str = "|",
-                min_fanout: int = 32) -> np.ndarray:
-    """Port/host-scan detector: sources touching many distinct dsts with
-    single packets (logical out-degree ≈ packet out-degree)."""
+def detect_c2(E: Queryable, sep: str = "|", top_k: int = 10) -> C2Report:
+    """Run the fused detector over an incidence matrix (stage-5 output)
+    or directly over the database through a :class:`DBTable` binding."""
+    s = c2_scores(E, sep=sep)
+    order = np.argsort(s.scores)[::-1][:top_k]
+    return C2Report(s.hosts[order], s.scores[order], s.fanin[order],
+                    s.regularity[order], s.port_conc[order])
+
+
+def scan_hits(E: Queryable, sep: str = "|",
+              min_fanout: int = 32) -> np.ndarray:
+    """Scan-detector scoring core: sources touching at least
+    ``min_fanout`` distinct dsts with single packets (logical out-degree
+    ≈ packet out-degree).  Like :func:`c2_scores`, accepts an in-memory
+    windowed sub-Assoc — the streaming burst detector calls this on each
+    closed window's slice."""
     Esrc = E[:, StartsWith(f"ip.src{sep}")]
     Edst = E[:, StartsWith(f"ip.dst{sep}")]
     SD = Esrc.T * Edst
@@ -188,6 +218,12 @@ def scan_detect(E: Queryable, sep: str = "|",
         if u >= min_fanout and u / max(v2_by_key.get(k, 1.0), 1.0) > 0.9:
             hits.append(k[len(f"ip.src{sep}"):])
     return np.asarray(hits, dtype=str)
+
+
+def scan_detect(E: Queryable, sep: str = "|",
+                min_fanout: int = 32) -> np.ndarray:
+    """Port/host-scan detector (see :func:`scan_hits` for the core)."""
+    return scan_hits(E, sep=sep, min_fanout=min_fanout)
 
 
 def scan_report(E: Queryable, sep: str = "|",

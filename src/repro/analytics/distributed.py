@@ -80,32 +80,50 @@ def spmv_t_sharded(m: COO, x: jax.Array, mesh: Mesh,
 
 
 def pagerank_sharded(adj: COO, mesh: Mesh, num_iters: int = 20,
-                     damping: float = 0.85, axis: str = "data"
-                     ) -> jax.Array:
-    """PageRank with the SpMV inner loop distributed over the mesh."""
+                     damping: float = 0.85, axis: str = "data",
+                     personalize: jax.Array | None = None) -> jax.Array:
+    """PageRank with the SpMV inner loop distributed over the mesh.
+
+    ``personalize`` (n,) replaces the uniform restart distribution: the
+    random surfer teleports to those nodes instead of anywhere, and
+    dangling mass is redistributed the same way — personalized PageRank
+    (the MicroRCA root-cause localization primitive)."""
     n = adj.shape[0]
+    if personalize is None:
+        p = jnp.full((n,), 1.0 / n, jnp.float32)
+    else:
+        p = jnp.maximum(personalize.astype(jnp.float32), 0.0)
+        p = p / jnp.maximum(jnp.sum(p), 1e-30)
     out_deg_w = spmv_weighted_rowsum(adj, mesh, axis)
     inv_deg = jnp.where(out_deg_w > 0, 1.0 / jnp.maximum(out_deg_w, 1e-30),
                         0.0)
-    rank = jnp.full((n,), 1.0 / n, jnp.float32)
+    rank = p
     for _ in range(num_iters):
         contrib = rank * inv_deg
         spread = spmv_t_sharded(adj, contrib, mesh, axis)
         dangling = jnp.sum(jnp.where(out_deg_w > 0, 0.0, rank))
-        rank = (1 - damping) / n + damping * (spread + dangling / n)
+        rank = (1 - damping) * p + damping * (spread + dangling * p)
     return rank
 
 
 def pagerank_table(T, mesh: Mesh | None = None, num_iters: int = 20,
                    src_field: str = "ip.src", dst_field: str = "ip.dst",
-                   sep: str = "|", axis: str = "data"
-                   ) -> tuple[np.ndarray, jax.Array]:
+                   sep: str = "|", axis: str = "data",
+                   personalize: dict | None = None, reverse: bool = False,
+                   damping: float = 0.85) -> tuple[np.ndarray, jax.Array]:
     """PageRank served straight from the database binding.
 
     Queries the src/dst column blocks through the :class:`DBTable`
     selection grammar (pushed-down transpose-table scans), builds the
     host adjacency, then runs the mesh-sharded PageRank on the device
     payload.  Returns ``(node_keys, ranks)`` aligned by index.
+
+    ``T`` may equally be an in-memory incidence :class:`Assoc` (a
+    streaming window slice) — anything speaking the selection grammar.
+    ``personalize`` maps host keys to restart weights (personalized
+    PageRank); ``reverse`` transposes the adjacency first, so mass flows
+    from a seed *victim* back to the hosts feeding it traffic — the
+    MicroRCA root-cause direction.
     """
     from ..core import graph
 
@@ -114,10 +132,24 @@ def pagerank_table(T, mesh: Mesh | None = None, num_iters: int = 20,
         E, src_field=src_field, dst_field=dst_field, sep=sep))
     if adj.nnz == 0:
         return np.empty((0,), dtype=str), jnp.zeros((0,), jnp.float32)
+    if reverse:
+        adj = adj.T
+    p = None
+    if personalize is not None:
+        w = np.zeros(adj.row.shape[0], np.float32)
+        pos = np.searchsorted(adj.row, list(personalize))
+        for k, i in zip(personalize, pos):
+            if i < adj.row.shape[0] and adj.row[i] == k:
+                w[i] = float(personalize[k])
+        if w.sum() <= 0:            # no seed present — uniform restart
+            p = None
+        else:
+            p = jnp.asarray(w)
     if mesh is None:
         mesh = Mesh(np.asarray(jax.devices()), (axis,))
     ranks = pagerank_sharded(adj.device_coo(jnp.float32), mesh,
-                             num_iters=num_iters, axis=axis)
+                             num_iters=num_iters, axis=axis,
+                             personalize=p, damping=damping)
     return adj.row, ranks
 
 

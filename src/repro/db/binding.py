@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import weakref
 from collections import deque
 from typing import Iterable, Optional, Sequence, Union
 
@@ -296,10 +297,16 @@ class TableStats(dict):
     def __init__(self, table: "DBTable"):
         super().__init__(row=0, col=0, full=0, deg=0,
                          cache_hit=0, cache_miss=0)
-        self._table = table
+        # weakref, not a strong back-pointer: stats lives on the table,
+        # so a strong ref here is a table<->stats cycle that keeps every
+        # closed backend (and its cells) parked until a full gc pass —
+        # a real leak for anything that binds stores in a loop.
+        self._table_ref = weakref.ref(table)
 
     def __call__(self) -> dict:
-        t = self._table
+        t = self._table_ref()
+        if t is None:       # table collected mid-call; nothing to report
+            return {"routes": {k: v for k, v in self.items()}}
         out = {"routes": {k: v for k, v in self.items()}}
         cache = t._cache or getattr(t.backend, "_scan_cache", None)
         if cache is not None:
@@ -321,7 +328,8 @@ class TableStats(dict):
         pool = getattr(t.backend, "_writer_pool", None)
         out["writers"] = pool.stats() if pool is not None else {
             "pending": 0, "queue_depth": 0, "n_written": 0,
-            "n_retried": 0, "n_errors": 0, "n_writers": 0}
+            "n_retried": 0, "n_errors": 0, "n_writers": 0,
+            "n_taps": 0, "tap_errors": 0}
         insts = getattr(t.backend, "instances", [t.backend])
         out["backend"] = {
             "kind": type(t.backend).__name__,
@@ -506,6 +514,22 @@ class DBTable:
                     pool = WriterPool(self.backend, **kw)
                     self.backend._writer_pool = pool
         return pool
+
+    def add_ingest_tap(self, fn) -> None:
+        """Register ``fn(rows, cols, vals)`` to observe every triple
+        block as the backend's writers drain it — the streaming-rollup
+        hook (:class:`repro.stream.TemporalRollup.ingest` attaches
+        here).  Ensures the shared :class:`WriterPool` exists first, so
+        *synchronous* puts also route through the pool (and hence the
+        tap) from this point on; only direct ``backend.put_triples``
+        calls bypass it.  No extra scan is ever issued: the tap sees
+        the very arrays the writer just applied."""
+        self.writer().add_tap(fn)
+
+    def remove_ingest_tap(self, fn) -> None:
+        pool = getattr(self.backend, "_writer_pool", None)
+        if pool is not None:
+            pool.remove_tap(fn)
 
     def flush(self) -> None:
         """Barrier: block until queued async writes are applied,

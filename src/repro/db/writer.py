@@ -155,6 +155,7 @@ class _InstanceWriter:
                 self.n_written += self.store.put_triples(r, c, v)
                 if attempt:
                     self.n_retried += 1
+                self.pool._notify_taps(r, c, v)
                 return
             except BaseException as e:  # noqa: BLE001 — propagate at barrier
                 if attempt >= self.pool.max_retries:
@@ -205,7 +206,34 @@ class WriterPool:
         self._err_lock = threading.Lock()
         self._errors: list[BaseException] = []
         self._closed = False
+        # ingest taps: callables observing every applied block *as it
+        # drains* (streaming rollups ride this — no extra table scan).
+        # Registration is copy-on-write so _notify_taps never locks.
+        self._taps: tuple = ()
+        self.tap_errors = 0
         self._writers = [_InstanceWriter(s, maxsize, self) for s in stores]
+
+    # -- ingest taps --------------------------------------------------------
+    def add_tap(self, fn) -> None:
+        """Register ``fn(rows, cols, vals)`` to observe each triple block
+        right after its mutation lands (called on the writer thread, so a
+        slow tap backpressures that instance's queue — keep taps cheap).
+        A tap exception is counted, not propagated: observers must never
+        fail ingest."""
+        with self._err_lock:
+            self._taps = self._taps + (fn,)
+
+    def remove_tap(self, fn) -> None:
+        with self._err_lock:
+            self._taps = tuple(t for t in self._taps if t is not fn)
+
+    def _notify_taps(self, r, c, v) -> None:
+        for fn in self._taps:
+            try:
+                fn(r, c, v)
+            except BaseException:   # noqa: BLE001 — observer, not writer
+                with self._err_lock:
+                    self.tap_errors += 1
 
     # -- error plumbing ----------------------------------------------------
     def _record_error(self, e: BaseException) -> None:
@@ -321,6 +349,11 @@ class WriterPool:
             w.thread.join()
         self._check()
         self._sync_backend()
+        # the writers' back-pointers make pool <-> writer a reference
+        # cycle; cut it so a closed pool (and the backend it pins) frees
+        # by refcount instead of waiting on a gen-2 gc pass
+        for w in self._writers:
+            w.pool = None
 
     # -- introspection -----------------------------------------------------
     @property
@@ -347,7 +380,9 @@ class WriterPool:
                 "n_written": self.n_written,
                 "n_retried": self.n_retried,
                 "n_errors": n_err,
-                "n_writers": len(self._writers)}
+                "n_writers": len(self._writers),
+                "n_taps": len(self._taps),
+                "tap_errors": self.tap_errors}
 
     def __repr__(self) -> str:
         return (f"WriterPool({len(self._writers)} writer(s), "

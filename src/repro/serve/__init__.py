@@ -13,10 +13,11 @@ from .coalesce import QueryCoalescer
 from .jobs import JobQueue, QueueFull, UnknownJob
 from .ratelimit import RateLimited, RateLimiter, TokenBucket
 from .routes import HTTPError, Request, ROUTES
-from .stream import StatsPublisher
+from .stream import AlertPublisher, EventPublisher, StatsPublisher
 
 __all__ = ["Gateway", "main", "synthetic_incidence", "QueryCoalescer",
            "TokenAuth", "Tenant", "AuthError",
            "RateLimiter", "TokenBucket", "RateLimited",
            "JobQueue", "QueueFull", "UnknownJob",
-           "StatsPublisher", "HTTPError", "Request", "ROUTES"]
+           "EventPublisher", "StatsPublisher", "AlertPublisher",
+           "HTTPError", "Request", "ROUTES"]

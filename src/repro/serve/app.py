@@ -44,7 +44,7 @@ from .coalesce import QueryCoalescer
 from .jobs import JobQueue, QueueFull, UnknownJob
 from .ratelimit import RateLimited, RateLimiter
 from .routes import HTTPError, Request, match
-from .stream import StatsPublisher
+from .stream import AlertPublisher, StatsPublisher
 
 
 class Gateway:
@@ -55,7 +55,8 @@ class Gateway:
                  n_job_workers: int = 2, max_queued_jobs: int = 64,
                  job_result_ttl: float = 600.0,
                  stats_interval: float = 1.0,
-                 coalesce_window: float = 0.003):
+                 coalesce_window: float = 0.003,
+                 stream_analytics=None):
         # the serving view always runs the densification guard: an
         # interactive endpoint must 413, never OOM the gateway
         if degree_limit is not None:
@@ -83,6 +84,16 @@ class Gateway:
         else:
             self.deg_table = None
         self.publisher = StatsPublisher(table, interval=stats_interval)
+        # streaming temporal analytics (repro.stream): rollup rides the
+        # table's WriterPool ingest tap, alerts fan out over SSE
+        self.stream_analytics = stream_analytics
+        self.alert_publisher: Optional[AlertPublisher] = None
+        if stream_analytics is not None:
+            self.alert_publisher = AlertPublisher()
+            stream_analytics.on_alert(self.alert_publisher.on_alert)
+            if getattr(stream_analytics, "_table", None) is None:
+                stream_analytics.attach(self.table)
+            stream_analytics.start()
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
         self.address: Optional[str] = None
@@ -123,6 +134,10 @@ class Gateway:
     def stop(self) -> None:
         """Stop streaming, fail queued jobs fast, close the listener."""
         self.publisher.close()      # ends SSE generators first
+        if self.alert_publisher is not None:
+            self.alert_publisher.close()
+        if self.stream_analytics is not None:
+            self.stream_analytics.close()
         self.jobs.close()
         if self._httpd is not None:
             self._httpd.shutdown()
@@ -286,12 +301,21 @@ def main(argv=None) -> None:
     p.add_argument("--demo-rows", type=int, default=0,
                    help="ingest ~this many synthetic traffic edges at "
                         "boot (demo/smoke)")
+    p.add_argument("--stream", action="store_true",
+                   help="enable streaming temporal analytics: rollups "
+                        "on the ingest tap, online detectors, "
+                        "/v1/windows + /v1/alerts + SSE alert feed")
     args = p.parse_args(argv)
     if not args.token:
         p.error("at least one --token TOKEN:TENANT is required")
 
     T = DB("Tedge", "TedgeT", "TedgeDeg", backend=args.backend,
            n_instances=args.n_instances, path=args.path)
+    sa = None
+    if args.stream:
+        from ..stream import StreamAnalytics
+        # attach before any demo ingest so the rollup sees every block
+        sa = StreamAnalytics().attach(T)
     if args.demo_rows:
         E = synthetic_incidence(duration=max(args.demo_rows / 480.0, 5.0))
         T.put(E, sync=False)
@@ -300,7 +324,8 @@ def main(argv=None) -> None:
                  degree_limit=args.degree_limit,
                  n_job_workers=args.job_workers,
                  stats_interval=args.stats_interval,
-                 coalesce_window=args.coalesce_window)
+                 coalesce_window=args.coalesce_window,
+                 stream_analytics=sa)
     addr = gw.start(host=args.host, port=args.port)
     print(f"LISTENING {addr}", flush=True)
 

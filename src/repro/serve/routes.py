@@ -246,8 +246,23 @@ def _job_fns(gw, params: dict) -> Dict[str, Callable[[], dict]]:
                           min_fanout=int(params.get("min_fanout", 32)))
         return {"report": rep.to_dict()}
 
+    def root_cause_job() -> dict:
+        sa = _stream_analytics(gw)
+        try:
+            start = float(params["start"])
+            stop = float(params["stop"])
+        except (KeyError, ValueError):
+            raise HTTPError(400, "root_cause needs numeric "
+                                 "params.start and params.stop")
+        seeds = params.get("seeds")
+        rep = sa.root_cause(start, stop, seeds=seeds,
+                            top_k=int(params.get("top_k", 5)),
+                            num_iters=int(params.get("num_iters", 30)))
+        return {"report": rep.to_dict()}
+
     return {"pagerank": pagerank, "degree_fit": degree_fit_full,
-            "c2": c2_sweep, "scanners": scan_sweep}
+            "c2": c2_sweep, "scanners": scan_sweep,
+            "root_cause": root_cause_job}
 
 
 @route("POST", "/v1/jobs", cost=2.0)
@@ -284,6 +299,66 @@ def job_result(gw, req: Request, id: str) -> dict:
     return {"job": job.id, "kind": job.kind, "result": job.result}
 
 
+# -- streaming temporal analytics (repro.stream) ---------------------------
+
+def _stream_analytics(gw):
+    sa = getattr(gw, "stream_analytics", None)
+    if sa is None:
+        raise HTTPError(404, "streaming analytics not enabled on this "
+                             "gateway (boot with --stream)")
+    return sa
+
+
+@route("GET", "/v1/windows", cost=0.5)
+def windows(gw, req: Request) -> dict:
+    """Closed rollup-window summaries for one level, oldest first.
+    ``level`` is second|minute|hour; ``since`` filters on window start
+    (epoch seconds); summaries are the rollup's WindowSummary reports
+    (counts, unique src/dst, top destination, power-law fit)."""
+    sa = _stream_analytics(gw)
+    level = req.params.get("level", "second")
+    if level not in dict(sa.rollup.levels):
+        raise HTTPError(400, f"unknown level {level!r}; one of "
+                             f"{sorted(dict(sa.rollup.levels))}")
+    since = req.params.get("since")
+    try:
+        since_f = float(since) if since is not None else None
+    except ValueError:
+        raise HTTPError(400, f"since must be a number, got {since!r}")
+    items = sa.rollup.summaries(
+        level=level, limit=_int(req, "limit", 100, hi=10_000),
+        since=since_f)
+    return {"level": level, "n": len(items),
+            "windows": [w.to_dict() for w in items]}
+
+
+@route("GET", "/v1/alerts", cost=0.5)
+def alerts(gw, req: Request) -> dict:
+    """Recent detector alerts, oldest first.  ``kind`` filters to one
+    of spc|c2|scan|ddos; ``since`` on window start."""
+    sa = _stream_analytics(gw)
+    since = req.params.get("since")
+    try:
+        since_f = float(since) if since is not None else None
+    except ValueError:
+        raise HTTPError(400, f"since must be a number, got {since!r}")
+    items = sa.bank.alerts(limit=_int(req, "limit", 100, hi=10_000),
+                           kind=req.params.get("kind"), since=since_f)
+    return {"n": len(items), "alerts": [a.to_dict() for a in items]}
+
+
+@route("GET", "/v1/stream/alerts", cost=1.0, stream=True)
+def stream_alerts(gw, req: Request):
+    """SSE live feed of detector alerts (one ``data: <json>`` frame per
+    AlertReport).  ``n`` bounds the number of events; ``replay`` resends
+    that many recent alerts first."""
+    _stream_analytics(gw)
+    n = req.params.get("n")
+    return gw.alert_publisher.events(
+        max_events=int(n) if n is not None else None,
+        replay=_int(req, "replay", 0, lo=0, hi=10_000))
+
+
 # -- observability ---------------------------------------------------------
 
 @route("GET", "/v1/stats", cost=0.1)
@@ -291,12 +366,15 @@ def stats(gw, req: Request) -> dict:
     """The unified counter snapshot: table (routes/cache/writers/backend)
     + rate limiter + job queue + the stream's latest windowed sample."""
     from ..core.expr import launch_counts
+    sa = getattr(gw, "stream_analytics", None)
     return {"table": to_jsonable(gw.table.stats()),
             "ratelimit": gw.limiter.stats(),
             "jobs": gw.jobs.stats(),
             "coalesce": gw.coalescer.stats(),
             "kernel_launches": launch_counts(),
-            "stream": gw.publisher.latest()}
+            "stream": gw.publisher.latest(),
+            "streaming": to_jsonable(sa.stats()) if sa is not None
+            else None}
 
 
 @route("GET", "/v1/stream/stats", cost=1.0, stream=True)

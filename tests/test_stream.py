@@ -1,0 +1,659 @@
+"""Streaming temporal analytics: hierarchical rollup conservation (child
+buckets sum exactly to parents, and stream totals match a batch recount
+of the same traffic), online detector precision/recall against injected
+ground-truth attacks (clean diurnal traffic stays quiet), root-cause
+localization, report round-trips, the WriterPool ingest tap under
+concurrent async writes, and the gateway's windows/alerts/SSE surface."""
+import json
+import threading
+import time
+import http.client
+
+import numpy as np
+import pytest
+
+from repro.core.assoc import Assoc
+from repro.db import DB
+from repro.serve import Gateway, Tenant, TokenAuth
+from repro.stream import (AlertReport, AttackSpec, DetectorBank,
+                          RootCauseReport, ScenarioConfig, StreamAnalytics,
+                          TemporalRollup, WesternElectric, WindowSummary,
+                          root_cause, scenario_incidence, stream_blocks,
+                          synth_scenario)
+
+T0 = 1_492_000_000.0
+N_FIELDS = 9            # val2col explodes each packet into 9 field|value cells
+
+
+def attack_cfg(seed=3):
+    """The canonical scenario mix: diurnal background plus one attack
+    of each kind.  The DDoS sits in a later minute bucket than the pure
+    beacon windows so the C2 scorer is exercised both with and without
+    a competing flood (a flood is itself a legitimate beacon-score
+    candidate: high fan-in, one port)."""
+    return ScenarioConfig(
+        duration_s=150.0, n_hosts=96, base_rate=70.0, seed=seed, t0=T0,
+        attacks=(
+            AttackSpec("c2", start=5, duration=140, n_hosts=8,
+                       period_s=2.0, port=6667),
+            AttackSpec("scan", start=30, duration=10, rate=60.0),
+            AttackSpec("ddos", start=85, duration=10, n_hosts=8,
+                       rate=40.0, port=80),
+        ))
+
+
+@pytest.fixture(scope="module")
+def driven():
+    """Scenario streamed block-by-block through a rollup + detector
+    bank, detectors run as windows close — shared by the conservation
+    and detector tests."""
+    cfg = attack_cfg()
+    rec, truth = synth_scenario(cfg)
+    roll = TemporalRollup(lateness_s=2.0)
+    bank = DetectorBank(roll)
+    alerts = []
+    for _, A in stream_blocks(cfg, rec=rec):
+        roll.ingest(*A.triples())
+        alerts.extend(bank.process())
+    alerts.extend(bank.process(force=True))
+    return dict(cfg=cfg, rec=rec, truth=truth, roll=roll, bank=bank,
+                alerts=alerts)
+
+
+def overlaps(alert, att, pad=0.0):
+    return (alert.window_start < att["stop"] + pad
+            and alert.window_stop > att["start"] - pad)
+
+
+# ---------------------------------------------------------------------------
+# synthetic scenario harness
+# ---------------------------------------------------------------------------
+
+class TestSynth:
+    def test_deterministic(self):
+        cfg = attack_cfg()
+        r1, t1 = synth_scenario(cfg)
+        r2, t2 = synth_scenario(cfg)
+        assert np.array_equal(r1, r2)
+        assert t1 == t2
+
+    def test_truth_labels(self, driven):
+        truth = driven["truth"]
+        kinds = [a["kind"] for a in truth["attacks"]]
+        assert kinds == ["c2", "scan", "ddos"]
+        for a in truth["attacks"]:
+            assert T0 <= a["start"] < a["stop"] <= T0 + 150.0
+            assert a["n_packets"] > 0
+        assert len(truth["attacks"][2]["attackers"]) == 8
+
+    def test_stream_blocks_cover_everything(self, driven):
+        n = sum(A.nnz for _, A in
+                stream_blocks(driven["cfg"], rec=driven["rec"]))
+        assert n == driven["rec"].shape[0] * N_FIELDS
+
+
+# ---------------------------------------------------------------------------
+# rollup conservation + recount
+# ---------------------------------------------------------------------------
+
+class TestRollupConservation:
+    def test_levels_agree_exactly(self, driven):
+        roll = driven["roll"]
+        tots = {lv: roll.totals(lv) for lv, _ in roll.levels}
+        cells = {lv: t["n_cells"] for lv, t in tots.items()}
+        pkts = {lv: t["n_packets"] for lv, t in tots.items()}
+        assert len(set(cells.values())) == 1, cells
+        assert len(set(pkts.values())) == 1, pkts
+        # degree sketches conserve too: summing per-level counters over
+        # all buckets gives identical key → count maps
+        degs = [t["deg"] for t in tots.values()]
+        assert degs[0] == degs[1] == degs[2]
+
+    def test_child_buckets_sum_to_parent(self, driven):
+        roll = driven["roll"]
+        secs = {w.start: w for w in roll.summaries("second", limit=10_000)}
+        for m in roll.summaries("minute", limit=10_000):
+            kids = [w for s, w in secs.items()
+                    if m.start <= s < m.start + m.width]
+            assert sum(w.n_cells for w in kids) == m.n_cells
+            assert sum(w.n_packets for w in kids) == m.n_packets
+
+    def test_totals_match_batch_recount(self, driven):
+        """The streamed rollup must agree exactly with a from-scratch
+        batch pass over the same records."""
+        A, _ = scenario_incidence(driven["cfg"])
+        tot = driven["roll"].totals("second")
+        assert tot["n_cells"] == A.nnz
+        assert tot["n_packets"] == driven["rec"].shape[0]
+        st = driven["roll"].stats()
+        assert st["n_attributed"] == A.nnz
+        assert st["n_unattributed"] == 0
+        assert st["n_pending"] == 0
+
+    def test_per_second_packets_match_recount(self, driven):
+        rec = driven["rec"]
+        ts = rec["ts_sec"].astype(np.float64) + rec["ts_usec"] * 1e-6
+        want = {}
+        for s in np.floor(ts):
+            want[s] = want.get(s, 0) + 1
+        got = {w.start: w.n_packets
+               for w in driven["roll"].summaries("second", limit=10_000)}
+        assert got == want
+
+    def test_slice_matches_window_population(self, driven):
+        roll = driven["roll"]
+        rec = driven["rec"]
+        ts = rec["ts_sec"].astype(np.float64) + rec["ts_usec"] * 1e-6
+        lo, hi = T0 + 20.0, T0 + 23.0
+        E = roll.slice(lo, hi)
+        n_pkts = int(((ts >= lo) & (ts < hi)).sum())
+        assert E.nnz == n_pkts * N_FIELDS
+        assert len(E.row) == n_pkts
+
+    def test_scaling_fit_per_level(self, driven):
+        """Each closed minute carries a power-law fit of its dst-degree
+        distribution — the paper's sub-window scaling relation."""
+        mins = [w for w in driven["roll"].summaries("minute", limit=100)
+                if w.n_packets > 100]
+        assert mins
+        for w in mins:
+            assert np.isfinite(w.alpha) and w.alpha > 0
+            assert np.isfinite(w.r2)
+
+    def test_degree_view_feeds_fit_degree_table(self, driven):
+        from repro.analytics import fit_degree_table
+        roll = driven["roll"]
+        start = roll.summaries("minute", limit=1)[0].start
+        fit = fit_degree_table(roll.degree_view("minute", start),
+                               "ip.dst|")
+        assert np.isfinite(float(fit.alpha))
+
+
+class TestRollupMechanics:
+    @staticmethod
+    def _pkt(row, t):
+        """One packet's triples: the time cell plus two field cells."""
+        r = [row] * 3
+        c = [f"frame.time|{t:.6f}", "ip.src|1.2.3.4", "ip.dst|5.6.7.8"]
+        return np.asarray(r), np.asarray(c), np.asarray(["1"] * 3)
+
+    def test_watermark_close_semantics(self):
+        roll = TemporalRollup(levels=("second",), lateness_s=2.0)
+        for i in range(6):
+            roll.ingest(*self._pkt(f"p{i}", 100.0 + i))
+        closed = roll.close_due()
+        # max_ts = 105, watermark 103 → seconds 100..102 close, rest stay
+        assert [w.start for w in closed] == [100.0, 101.0, 102.0]
+        assert roll.close_due() == []           # idempotent
+        flush = roll.close_due(force=True)
+        assert {w.start for w in flush} == {103.0, 104.0, 105.0}
+
+    def test_late_arrival_counted_not_lost(self):
+        roll = TemporalRollup(levels=("second",), lateness_s=0.5)
+        for i in range(4):
+            roll.ingest(*self._pkt(f"p{i}", 100.0 + i))
+        roll.close_due()
+        roll.ingest(*self._pkt("late", 100.2))  # into a closed bucket
+        assert roll.stats()["n_late"] == 3
+        assert roll.totals("second")["n_packets"] == 5
+
+    def test_split_block_attribution(self):
+        """A packet split across put batches: field cells arrive before
+        the block carrying its frame.time — the pending map must hold
+        them and attribute on resolution."""
+        roll = TemporalRollup(levels=("second",))
+        r, c, v = self._pkt("px", 100.0)
+        roll.ingest(r[1:], c[1:], v[1:])        # fields first, no time
+        assert roll.stats()["n_pending"] == 2
+        assert roll.stats()["n_attributed"] == 0
+        roll.ingest(r[:1], c[:1], v[:1])        # the time cell lands
+        st = roll.stats()
+        assert st["n_pending"] == 0
+        assert st["n_attributed"] == 3
+        assert roll.totals("second")["n_cells"] == 3
+
+    def test_pending_bound_evicts_and_counts(self):
+        roll = TemporalRollup(levels=("second",), max_pending_rows=2)
+        for i in range(4):                      # 4 rows, no time cells
+            roll.ingest(np.asarray([f"p{i}"]),
+                        np.asarray(["ip.src|1.1.1.1"]),
+                        np.asarray(["1"]))
+        st = roll.stats()
+        assert st["n_unattributed"] == 2        # two oldest evicted
+        assert st["n_pending"] == 2
+
+    def test_time_relative_prefix_not_confused(self):
+        """frame.time_relative| shares the frame.time prefix as a plain
+        string — the rollup must key timestamps off frame.time| only."""
+        roll = TemporalRollup(levels=("second",))
+        r = np.asarray(["p0"] * 3)
+        c = np.asarray(["frame.time_relative|0.5",
+                        "frame.time|200.0", "ip.dst|9.9.9.9"])
+        roll.ingest(r, c, np.asarray(["1"] * 3))
+        assert roll.totals("second")["n_packets"] == 1
+        assert list(roll._buckets["second"]) == [200.0]
+
+    def test_eviction_keeps_totals_exact(self):
+        roll = TemporalRollup(levels=("second",), lateness_s=0.0,
+                              max_buckets=3)
+        for i in range(10):
+            roll.ingest(*TestRollupMechanics._pkt(f"p{i}", 100.0 + i))
+        roll.close_due(force=True)
+        assert len(roll._buckets["second"]) <= 3
+        tot = roll.totals("second")
+        assert tot["n_packets"] == 10           # evicted counts retained
+        assert tot["n_evicted_buckets"] > 0
+
+
+# ---------------------------------------------------------------------------
+# SPC / Western Electric
+# ---------------------------------------------------------------------------
+
+class TestWesternElectric:
+    def test_steady_series_never_fires(self):
+        we = WesternElectric(min_baseline=10)
+        rng = np.random.default_rng(0)
+        fires = [we.update(100 + rng.normal(0, 3))[0] for _ in range(200)]
+        assert all(f == 0 for f in fires)
+
+    def test_step_change_fires_rule1(self):
+        we = WesternElectric(min_baseline=10, sigma_floor_frac=0.05)
+        rng = np.random.default_rng(1)
+        for _ in range(30):
+            we.update(100 + rng.normal(0, 3))
+        rule, z = we.update(200.0)
+        assert rule == 1
+        assert z > 3
+
+    def test_two_of_three_fires_rule2(self):
+        we = WesternElectric(min_baseline=10, sigma_floor_frac=0.05)
+        rng = np.random.default_rng(2)
+        for _ in range(30):
+            we.update(100 + rng.normal(0, 4))
+        we.update(112.0)                        # > 2σ, < 3σ
+        rule, _ = we.update(112.0)
+        assert rule == 2
+
+    def test_sustained_shift_fires_a_run_rule(self):
+        we = WesternElectric(min_baseline=60, sigma_floor_frac=0.05)
+        for _ in range(60):
+            we.update(100.0)
+        fired = set()
+        for _ in range(10):
+            fired.add(we.update(104.0)[0])      # ~0.8σ above, same side
+        assert 4 in fired                       # eight-in-a-row rule
+
+    def test_sigma_floor_blocks_zero_variance_trip(self):
+        we = WesternElectric(min_baseline=10)
+        for _ in range(20):
+            we.update(100.0)
+        rule, z = we.update(101.0)              # σ=0 without the floor
+        assert rule == 0
+        assert z < 1.0
+
+
+# ---------------------------------------------------------------------------
+# detectors against ground truth
+# ---------------------------------------------------------------------------
+
+class TestDetectors:
+    def test_every_injected_attack_detected(self, driven):
+        truth = {a["kind"]: a for a in driven["truth"]["attacks"]}
+        for kind, att in truth.items():
+            hits = [a for a in driven["alerts"]
+                    if a.kind == kind and overlaps(a, att)]
+            assert hits, f"no {kind} alert inside its truth window"
+
+    def test_c2_alert_names_the_c2_server(self, driven):
+        att = driven["truth"]["attacks"][0]
+        c2 = [a for a in driven["alerts"] if a.kind == "c2"]
+        assert any(a.victim == att["victim"] for a in c2)
+
+    def test_scan_alert_names_the_scanner(self, driven):
+        att = driven["truth"]["attacks"][1]
+        scans = [a for a in driven["alerts"] if a.kind == "scan"]
+        assert scans
+        for a in scans:
+            assert att["attackers"][0] in a.hosts.tolist()
+
+    def test_ddos_alert_names_the_victim(self, driven):
+        att = driven["truth"]["attacks"][2]
+        dd = [a for a in driven["alerts"] if a.kind == "ddos"]
+        assert dd
+        assert all(a.victim == att["victim"] for a in dd)
+
+    def test_attack_alerts_only_during_attacks(self, driven):
+        """Precision: every attack-kind alert overlaps *some* injected
+        attack (minute-level alerts padded by their window width)."""
+        atts = driven["truth"]["attacks"]
+        for a in driven["alerts"]:
+            if a.kind == "spc":
+                continue
+            assert any(overlaps(a, att, pad=a.window_stop - a.window_start)
+                       for att in atts), (a.kind, a.window_start - T0)
+
+    def test_clean_diurnal_stays_quiet(self):
+        cfg = ScenarioConfig(duration_s=120.0, n_hosts=64, base_rate=70.0,
+                             seed=0, t0=T0)
+        roll = TemporalRollup()
+        bank = DetectorBank(roll)
+        alerts = []
+        for _, A in stream_blocks(cfg):
+            roll.ingest(*A.triples())
+            alerts.extend(bank.process())
+        alerts.extend(bank.process(force=True))
+        assert not [a for a in alerts if a.kind in ("c2", "scan", "ddos")]
+        assert len(alerts) <= 2                 # SPC noise stays rare
+
+    def test_root_cause_ranks_attackers(self, driven):
+        att = driven["truth"]["attacks"][2]
+        rc = root_cause(driven["roll"], att["start"] - 1.0,
+                        att["stop"] + 1.0, [att["victim"]], top_k=3)
+        hits = [h for h in rc.hosts if h in att["attackers"]]
+        assert len(hits) >= 2                   # acceptance floor is 1
+        assert att["victim"] not in rc.hosts    # seeds excluded
+
+    def test_stream_analytics_seeds_from_alerts(self, driven):
+        """StreamAnalytics.root_cause with no seeds borrows them from
+        the most recent alert overlapping the window."""
+        att = driven["truth"]["attacks"][2]
+        sa = StreamAnalytics(rollup=driven["roll"], bank=driven["bank"])
+        rc = sa.root_cause(att["start"] - 1.0, att["stop"] + 1.0, top_k=3)
+        assert rc.seeds.shape[0] >= 1
+
+
+# ---------------------------------------------------------------------------
+# report round-trips
+# ---------------------------------------------------------------------------
+
+class TestReports:
+    def test_alert_report_roundtrip(self, driven):
+        a = next(x for x in driven["alerts"] if x.kind == "ddos")
+        back = AlertReport.from_dict(json.loads(a.to_json()))
+        assert back.kind == a.kind and back.victim == a.victim
+        assert back.window_start == a.window_start
+        assert back.detail == a.detail
+        assert np.array_equal(np.asarray(back.hosts, dtype=str), a.hosts)
+
+    def test_window_summary_roundtrip(self, driven):
+        w = driven["roll"].summaries("minute", limit=1)[0]
+        back = WindowSummary.from_dict(json.loads(w.to_json()))
+        assert back.n_cells == w.n_cells and back.level == w.level
+        assert back.top_dst == w.top_dst
+        assert back.alpha == pytest.approx(w.alpha)
+
+    def test_root_cause_roundtrip(self, driven):
+        att = driven["truth"]["attacks"][2]
+        rc = root_cause(driven["roll"], att["start"], att["stop"],
+                        [att["victim"]], top_k=2, num_iters=5)
+        back = RootCauseReport.from_dict(json.loads(rc.to_json()))
+        assert np.array_equal(np.asarray(back.hosts, dtype=str), rc.hosts)
+        assert np.allclose(np.asarray(back.ranks, float), rc.ranks)
+
+
+# ---------------------------------------------------------------------------
+# WriterPool ingest tap
+# ---------------------------------------------------------------------------
+
+class TestIngestTap:
+    def test_tap_coherent_under_concurrent_async_writes(self):
+        """Blocks enqueued from several threads over a sharded pool: the
+        rollup must still see exactly the table's contents."""
+        cfg = ScenarioConfig(duration_s=30.0, n_hosts=48, base_rate=50.0,
+                             seed=9, t0=T0)
+        blocks = list(stream_blocks(cfg))
+        total = sum(A.nnz for _, A in blocks)
+        T = DB("Tedge", "TedgeT", "TedgeDeg", backend="memory",
+               n_instances=2, tablets_per_instance=2)
+        roll = TemporalRollup()
+        T.add_ingest_tap(roll.ingest)
+        lanes = [blocks[i::4] for i in range(4)]
+
+        def lane(blks):
+            for _, A in blks:
+                T.put(A, sync=False)
+
+        threads = [threading.Thread(target=lane, args=(l,)) for l in lanes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        T.flush()
+        st = roll.stats()
+        assert st["n_attributed"] + st["n_pending"] == total
+        assert st["n_pending"] == 0             # blocks carry their times
+        assert roll.totals("second")["n_cells"] == total
+        assert T.writer().stats()["tap_errors"] == 0
+        T.close()
+
+    def test_sync_puts_also_reach_the_tap(self):
+        T = DB("Tedge", backend="memory")
+        seen = []
+        T.add_ingest_tap(lambda r, c, v: seen.append(len(r)))
+        A = Assoc("r1,r2,", "c1,c2,", [1.0, 2.0])
+        T.put(A, sync=True)
+        assert sum(seen) == 2
+        T.close()
+
+    def test_tap_errors_counted_not_fatal(self):
+        T = DB("Tedge", backend="memory")
+
+        def bad_tap(r, c, v):
+            raise RuntimeError("observer bug")
+
+        T.add_ingest_tap(bad_tap)
+        T.put(Assoc("r1,", "c1,", [1.0]), sync=False)
+        T.flush()                               # must not raise
+        st = T.writer().stats()
+        assert st["tap_errors"] >= 1
+        assert st["n_written"] >= 1
+        assert st["n_taps"] == 1
+        T.close()
+
+    def test_remove_tap_stops_updates(self):
+        T = DB("Tedge", backend="memory")
+        seen = []
+        tap = lambda r, c, v: seen.append(len(r))
+        T.add_ingest_tap(tap)
+        T.put(Assoc("r1,", "c1,", [1.0]), sync=False)
+        T.flush()
+        T.remove_ingest_tap(tap)
+        T.put(Assoc("r2,", "c2,", [1.0]), sync=False)
+        T.flush()
+        assert sum(seen) == 1
+        T.close()
+
+
+# ---------------------------------------------------------------------------
+# gateway surface (+ the end-to-end acceptance demo)
+# ---------------------------------------------------------------------------
+
+TOKENS = {"tok-a": Tenant("alice", rate=1000.0, burst=2000.0)}
+
+
+def _req(gw, method, path, body=None, timeout=30):
+    host, port = gw.address.split(":")
+    c = http.client.HTTPConnection(host, int(port), timeout=timeout)
+    headers = {"Authorization": "Bearer tok-a"}
+    raw = json.dumps(body).encode() if body is not None else None
+    c.request(method, path, body=raw, headers=headers)
+    r = c.getresponse()
+    data = json.loads(r.read())
+    c.close()
+    return r.status, data
+
+
+@pytest.fixture(scope="module")
+def sgw():
+    """The acceptance demo, held open for the route tests: the scenario
+    mix streamed through async ingest into a gateway with streaming
+    analytics attached."""
+    cfg = attack_cfg(seed=3)
+    rec, truth = synth_scenario(cfg)
+    T = DB("Tedge", "TedgeT", "TedgeDeg", backend="memory")
+    sa = StreamAnalytics(interval=30.0)         # tests drive step()
+    gw = Gateway(T, TokenAuth(TOKENS), stats_interval=0.2,
+                 stream_analytics=sa)
+    gw.start()
+    for _, A in stream_blocks(cfg, rec=rec):
+        T.put(A, sync=False)
+        sa.step()
+    T.flush()
+    sa.step(force=True)
+    yield dict(gw=gw, cfg=cfg, rec=rec, truth=truth, sa=sa)
+    gw.stop()
+    T.close()
+
+
+class TestGatewayStreaming:
+    def test_windows_route(self, sgw):
+        s, d = _req(sgw["gw"], "GET", "/v1/windows?level=second&limit=500")
+        assert s == 200 and d["n"] > 60
+        w = d["windows"][0]
+        assert w["level"] == "second" and w["n_packets"] > 0
+        s, d = _req(sgw["gw"], "GET", "/v1/windows?level=minute")
+        assert s == 200 and 1 <= d["n"] <= 5
+        since = T0 + 60.0
+        s, d = _req(sgw["gw"], "GET",
+                    f"/v1/windows?level=second&since={since}")
+        assert s == 200
+        assert all(w["start"] >= since for w in d["windows"])
+
+    def test_windows_route_validates_level(self, sgw):
+        s, d = _req(sgw["gw"], "GET", "/v1/windows?level=fortnight")
+        assert s == 400
+
+    def test_alerts_route_with_kind_filter(self, sgw):
+        s, d = _req(sgw["gw"], "GET", "/v1/alerts?kind=ddos")
+        assert s == 200 and d["n"] >= 1
+        att = sgw["truth"]["attacks"][2]
+        for a in d["alerts"]:
+            assert a["kind"] == "ddos"
+            assert a["victim"] == att["victim"]
+
+    def test_all_attacks_surface_with_correct_windows(self, sgw):
+        """Acceptance: all three injected attacks appear as alerts with
+        the right type and window."""
+        s, d = _req(sgw["gw"], "GET", "/v1/alerts?limit=1000")
+        assert s == 200
+        for att in sgw["truth"]["attacks"]:
+            hits = [a for a in d["alerts"] if a["kind"] == att["kind"]
+                    and a["window_start"] < att["stop"]
+                    and a["window_stop"] > att["start"]]
+            assert hits, f"{att['kind']} missing from /v1/alerts"
+
+    def test_rollup_matches_table_recount(self, sgw):
+        """Acceptance: per-level totals exactly match a batch recount of
+        the ingested table."""
+        gw = sgw["gw"]
+        A = gw.table[:, :].eval()
+        roll = gw.stream_analytics.rollup
+        for lv, _ in roll.levels:
+            assert roll.totals(lv)["n_cells"] == A.nnz
+        n_time = int(np.char.startswith(A.triples()[1],
+                                        "frame.time|").sum())
+        assert roll.totals("second")["n_packets"] == n_time
+
+    def test_root_cause_job_ranks_attacker_top3(self, sgw):
+        """Acceptance: the root-cause job puts an injected attacker in
+        its top-3."""
+        att = sgw["truth"]["attacks"][2]
+        s, d = _req(sgw["gw"], "POST", "/v1/jobs",
+                    body={"kind": "root_cause",
+                          "params": {"start": att["start"] - 1.0,
+                                     "stop": att["stop"] + 1.0,
+                                     "seeds": [att["victim"]],
+                                     "top_k": 3}})
+        assert s == 200
+        jid = d["job"]
+        deadline = time.monotonic() + 120
+        while time.monotonic() < deadline:
+            s, d = _req(sgw["gw"], "GET", f"/v1/jobs/{jid}/result")
+            if s != 202:
+                break
+            time.sleep(0.1)
+        assert s == 200, d
+        hosts = d["result"]["report"]["hosts"]
+        assert any(h in att["attackers"] for h in hosts)
+
+    def test_root_cause_job_rejects_bad_params(self, sgw):
+        s, d = _req(sgw["gw"], "POST", "/v1/jobs",
+                    body={"kind": "root_cause", "params": {}})
+        jid = d["job"]
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            s, d = _req(sgw["gw"], "GET", f"/v1/jobs/{jid}")
+            if d["status"] in ("done", "failed"):
+                break
+            time.sleep(0.05)
+        assert d["status"] == "failed"
+
+    def test_stats_exposes_streaming_section(self, sgw):
+        s, d = _req(sgw["gw"], "GET", "/v1/stats")
+        assert s == 200
+        st = d["streaming"]
+        assert st["rollup"]["n_attributed"] > 0
+        assert st["bank"]["n_alerts"] >= 1
+        writers = d["table"]["writers"]
+        assert writers["n_taps"] == 1
+
+    def test_sse_alert_replay(self, sgw):
+        host, port = sgw["gw"].address.split(":")
+        c = http.client.HTTPConnection(host, int(port), timeout=15)
+        c.request("GET", "/v1/stream/alerts?replay=3&n=2",
+                  headers={"Authorization": "Bearer tok-a"})
+        r = c.getresponse()
+        assert r.status == 200
+        assert r.getheader("Content-Type") == "text/event-stream"
+        frames = [l for l in r.read().decode().split("\n\n")
+                  if l.startswith("data: ")]
+        c.close()
+        assert len(frames) == 2
+        alert = json.loads(frames[0][len("data: "):])
+        assert alert["kind"] in ("spc", "c2", "scan", "ddos")
+
+    def test_sse_live_alert_delivery(self, sgw):
+        """A subscriber connected *before* the traffic arrives receives
+        the alert pushed when the detector pass raises it."""
+        gw, cfg = sgw["gw"], sgw["cfg"]
+        host, port = gw.address.split(":")
+        got = []
+
+        def subscribe():
+            c = http.client.HTTPConnection(host, int(port), timeout=60)
+            c.request("GET", "/v1/stream/alerts?n=1",
+                      headers={"Authorization": "Bearer tok-a"})
+            r = c.getresponse()
+            got.append(r.read().decode())
+            c.close()
+
+        t = threading.Thread(target=subscribe)
+        t.start()
+        time.sleep(0.3)                     # let the subscription settle
+        # a fresh flood burst 100 s after the scenario: new ddos alerts
+        burst = ScenarioConfig(
+            duration_s=200.0, n_hosts=64, base_rate=1.0, seed=4, t0=T0,
+            attacks=(AttackSpec("ddos", start=190, duration=8,
+                                n_hosts=8, rate=40.0),))
+        rec, _ = synth_scenario(burst)
+        keep = rec["ts_sec"] >= T0 + 185
+        for _, A in stream_blocks(burst, rec=rec[keep]):
+            gw.table.put(A, sync=False)
+        gw.table.flush()
+        sgw["sa"].step(force=True)
+        t.join(timeout=30)
+        assert got and "data: " in got[0]
+
+
+class TestGatewayWithoutStreaming:
+    def test_routes_404_when_not_enabled(self):
+        T = DB("Tedge", backend="memory")
+        gw = Gateway(T, TokenAuth(TOKENS))
+        gw.start()
+        try:
+            for path in ("/v1/windows", "/v1/alerts", "/v1/stream/alerts"):
+                s, d = _req(gw, "GET", path)
+                assert s == 404, path
+        finally:
+            gw.stop()
+            T.close()
