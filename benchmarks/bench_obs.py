@@ -1,0 +1,125 @@
+"""Observability overhead benchmarks — and the gates that keep the
+metrics/tracing plane honest.
+
+The obs design promise (see ``repro.obs``): layers instrument
+unconditionally, and the *untraced* hot path pays one ContextVar read
+per site.  Two gates enforce it:
+
+* **traced-off ≤ 5 %**: the estimated cost of every no-op span a query
+  would hit (measured no-op cost × spans-per-query) must stay under 5 %
+  of the untraced query's wall time — i.e. the instrumentation is
+  invisible when nobody asked for a trace.
+* **traced-on ≤ 25 %**: the same ingest+query wave run inside an active
+  trace (every span recorded) must stay within 1.25× of the untraced
+  wave, measured as interleaved A/B pairs so drift hits both sides
+  (plus a small absolute floor for CI-sized runs).
+
+Emitted records: primitive costs (``obs_noop_span``,
+``obs_counter_inc``) and the A/B wave (``obs_query_untraced`` /
+``obs_query_traced`` / ``obs_untraced_overhead_pct``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit, smoke, timeit, write_trajectory
+
+
+def _primitive_costs() -> float:
+    """No-op span + counter-inc cost; returns no-op span seconds."""
+    from repro.obs.metrics import Counter
+    from repro.obs.trace import span
+
+    n = 20_000 if smoke() else 200_000
+
+    def noop_loop():
+        for _ in range(n):
+            with span("bench.noop"):
+                pass
+
+    noop_s = timeit(noop_loop) / n
+    emit("obs_noop_span", noop_s * 1e6, f"ns={noop_s * 1e9:.0f}")
+
+    c = Counter()
+
+    def inc_loop():
+        for _ in range(n):
+            c.inc()
+
+    inc_s = timeit(inc_loop) / n
+    emit("obs_counter_inc", inc_s * 1e6, f"ns={inc_s * 1e9:.0f}")
+    return noop_s
+
+
+def main() -> None:
+    from repro.core.assoc import Assoc
+    from repro.db import DB
+    from repro.obs.trace import Tracer
+    from repro.serve.app import synthetic_incidence
+
+    noop_s = _primitive_costs()
+
+    # -- the ingest+query wave the gates run over ---------------------------
+    T = DB("Tedge", "TedgeT", "TedgeDeg", tablets_per_instance=2)
+    T.put(synthetic_incidence(seed=11,
+                              duration=10.0 if smoke() else 30.0),
+          sync=False)
+    T.flush()
+    seq = [0]
+
+    def wave():
+        i = seq[0]
+        seq[0] += 1
+        rows = np.asarray([f"obs{i}-{j}" for j in range(20)], str)
+        T.put(Assoc(rows, np.asarray(["obs|bench"] * 20, str),
+                    np.asarray(["1"] * 20)), sync=False)
+        T[:, "ip.src|*,"].eval()        # hot band (cache-served)
+        T[:, "obs|bench,"].eval()       # invalidated band (rescan)
+
+    wave()
+    wave()                              # warm caches + code paths
+
+    # -- interleaved A/B: untraced vs fully-traced waves --------------------
+    tracer = Tracer(max_traces=256, max_spans=512)
+    pairs = 6 if smoke() else 30
+    offs, ons = [], []
+    for k in range(pairs):
+        t0 = time.perf_counter()
+        wave()
+        offs.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        with tracer.start(f"bench-wave-{k}"):
+            wave()
+        ons.append(time.perf_counter() - t0)
+    off = sorted(offs)[len(offs) // 2]
+    on = sorted(ons)[len(ons) // 2]
+    ratio = on / off
+    emit("obs_query_untraced", off * 1e6, "", p50_s=off)
+    emit("obs_query_traced", on * 1e6, f"vs_untraced={ratio:.2f}x",
+         p50_s=on, ratio=ratio)
+
+    # spans one wave actually records (for the traced-off budget estimate)
+    counting = Tracer()
+    with counting.start("count"):
+        wave()
+    n_spans = counting.stats()["n_spans"]
+    frac = n_spans * noop_s / off
+    emit("obs_untraced_overhead_pct", frac * 100,
+         f"n_spans_per_wave={n_spans}", n_spans=n_spans)
+
+    # -- the gates ----------------------------------------------------------
+    assert frac <= 0.05, (
+        f"traced-off overhead {frac:.1%} of wave time exceeds the 5% "
+        f"budget ({n_spans} spans x {noop_s * 1e9:.0f}ns no-op)")
+    limit = max(1.25 * off, off + 0.002)    # 2ms floor for CI jitter
+    assert on <= limit, (
+        f"traced-on wave {on * 1e3:.2f}ms exceeds "
+        f"{limit * 1e3:.2f}ms (untraced {off * 1e3:.2f}ms)")
+
+    write_trajectory("obs")
+
+
+if __name__ == "__main__":
+    main()

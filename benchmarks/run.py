@@ -15,6 +15,8 @@ docstring for the paper artifact it reproduces):
 * bench_kernels          — Pallas kernels vs oracles
 * bench_stream           — streaming rollup tap overhead + detector
                            latency per closed window
+* bench_obs              — metrics/tracing overhead gates (untraced
+                           hot path ≤5%, traced ≤25%)
 """
 from __future__ import annotations
 
@@ -24,12 +26,13 @@ import traceback
 def main() -> None:
     from . import (bench_analytics, bench_expansion, bench_ingest,
                    bench_kernels, bench_loc, bench_lsm, bench_net,
-                   bench_pipeline_scaling, bench_query, bench_serving,
-                   bench_stream)
+                   bench_obs, bench_pipeline_scaling, bench_query,
+                   bench_serving, bench_stream)
     print("name,us_per_call,derived")
     for mod in (bench_loc, bench_expansion, bench_query, bench_ingest,
                 bench_lsm, bench_net, bench_analytics, bench_kernels,
-                bench_serving, bench_stream, bench_pipeline_scaling):
+                bench_serving, bench_stream, bench_obs,
+                bench_pipeline_scaling):
         try:
             mod.main()
         except Exception:

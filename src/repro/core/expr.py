@@ -35,6 +35,8 @@ import numpy as np
 
 from . import keys as K
 from . import sparse as S
+from ..obs.metrics import REGISTRY as _REGISTRY
+from ..obs.trace import span as _span
 from .assoc import Assoc
 
 # nnz at which reductions/matvecs move to the device path; small payloads
@@ -51,13 +53,48 @@ USE_PALLAS_SPMV = __import__("os").environ.get(
 # Device launch odometer: every device-lowered matvec/multivec product
 # bumps its counter.  This is the observability hook the batch-fusion
 # tests (and the serving layer's stats) use to prove N chains executed
-# as ONE fused SpMM launch instead of N SpMV launches.
-KERNEL_LAUNCHES = {"spmv": 0, "spmm": 0}
+# as ONE fused SpMM launch instead of N SpMV launches.  The counters
+# are atomic registry counters (repro.obs) — the old bare-dict version
+# raced under the gateway's concurrent reader threads — and surface in
+# /metrics as repro_kernel_launches_total{kernel=...}.
+_KERNEL_LAUNCH_FAMILY = _REGISTRY.counter(
+    "repro_kernel_launches_total", "Device-lowered kernel launches",
+    labels=("kernel",))
+_KERNEL_COUNTERS = {
+    "spmv": _KERNEL_LAUNCH_FAMILY.labels(kernel="spmv"),
+    "spmm": _KERNEL_LAUNCH_FAMILY.labels(kernel="spmm"),
+}
+
+
+class _LaunchView:
+    """Read-only mapping over the launch counters — the compatibility
+    shim for code that indexed the old ``KERNEL_LAUNCHES`` dict."""
+
+    def __getitem__(self, k: str) -> int:
+        return _KERNEL_COUNTERS[k].value
+
+    def __iter__(self):
+        return iter(_KERNEL_COUNTERS)
+
+    def __len__(self):
+        return len(_KERNEL_COUNTERS)
+
+    def keys(self):
+        return _KERNEL_COUNTERS.keys()
+
+    def items(self):
+        return [(k, c.value) for k, c in _KERNEL_COUNTERS.items()]
+
+    def __repr__(self):
+        return f"KERNEL_LAUNCHES{dict(self.items())!r}"
+
+
+KERNEL_LAUNCHES = _LaunchView()
 
 
 def launch_counts() -> dict:
     """Snapshot of the device launch counters (copy — safe to diff)."""
-    return dict(KERNEL_LAUNCHES)
+    return {k: c.value for k, c in _KERNEL_COUNTERS.items()}
 
 _FUSABLE = frozenset({"logical", "filter", "scale", "shift"})
 _ELEMENTWISE_BIN = frozenset({"add", "sub", "emul"})
@@ -208,7 +245,8 @@ class LazyAssoc:
     def eval(self) -> Assoc:
         """Optimize and execute the DAG; cached per node."""
         if self._value is None:
-            self._value = _Executor().run(_optimize(self))
+            with _span("planner.eval", op=self.op):
+                self._value = _Executor().run(_optimize(self))
         return self._value
 
     def __getattr__(self, name: str):
@@ -522,16 +560,17 @@ def _device_spmv_dev(asm, x):
     or the Pallas ELL kernel when enabled (repro.kernels.spmv — the TPU
     hot path, compiled on TPU / interpreted elsewhere)."""
     import jax.numpy as jnp
-    KERNEL_LAUNCHES["spmv"] += 1
-    if USE_PALLAS_SPMV:
-        from ..kernels import spmv as kspmv
-        csr = asm.tocsr()
-        k_max = int(max(np.diff(csr.indptr).max(), 1))
-        ecols, evals = kspmv.csr_to_ell(csr.indptr, csr.indices, csr.data,
-                                        csr.shape[0], k_max)
-        return kspmv.spmv_ell(ecols, evals, x.astype(jnp.float32))
-    coo = S.coo_from_scipy(asm)
-    return S.spmv(coo, x)
+    with _span("kernel.spmv", nnz=asm.nnz):
+        _KERNEL_COUNTERS["spmv"].inc()
+        if USE_PALLAS_SPMV:
+            from ..kernels import spmv as kspmv
+            csr = asm.tocsr()
+            k_max = int(max(np.diff(csr.indptr).max(), 1))
+            ecols, evals = kspmv.csr_to_ell(csr.indptr, csr.indices,
+                                            csr.data, csr.shape[0], k_max)
+            return kspmv.spmv_ell(ecols, evals, x.astype(jnp.float32))
+        coo = S.coo_from_scipy(asm)
+        return S.spmv(coo, x)
 
 
 def _device_spmm_dev(asm, X):
@@ -540,17 +579,18 @@ def _device_spmm_dev(asm, X):
     when enabled (same ``USE_PALLAS_SPMV`` switch as the matvec path,
     the env now covers SpMM), COO segment reduction otherwise."""
     import jax.numpy as jnp
-    KERNEL_LAUNCHES["spmm"] += 1
-    if USE_PALLAS_SPMV:
-        from ..kernels import spmm as kspmm
-        from ..kernels import spmv as kspmv
-        csr = asm.tocsr()
-        k_max = int(max(np.diff(csr.indptr).max(), 1))
-        ecols, evals = kspmv.csr_to_ell(csr.indptr, csr.indices, csr.data,
-                                        csr.shape[0], k_max)
-        return kspmm.spmm_ell(ecols, evals, X.astype(jnp.float32))
-    coo = S.coo_from_scipy(asm)
-    return S.spmm(coo, X)
+    with _span("kernel.spmm", nnz=asm.nnz, b=int(X.shape[1])):
+        _KERNEL_COUNTERS["spmm"].inc()
+        if USE_PALLAS_SPMV:
+            from ..kernels import spmm as kspmm
+            from ..kernels import spmv as kspmv
+            csr = asm.tocsr()
+            k_max = int(max(np.diff(csr.indptr).max(), 1))
+            ecols, evals = kspmv.csr_to_ell(csr.indptr, csr.indices,
+                                            csr.data, csr.shape[0], k_max)
+            return kspmm.spmm_ell(ecols, evals, X.astype(jnp.float32))
+        coo = S.coo_from_scipy(asm)
+        return S.spmm(coo, X)
 
 
 def _device_spmv(asm, x: np.ndarray) -> np.ndarray:
@@ -631,17 +671,18 @@ def eval_batch(exprs) -> list:
     such members are simply excluded from the fused prefetch.
     """
     nodes = [LazyAssoc.wrap(x) for x in exprs]
-    ex = _Executor()
-    plans = [n if n._value is not None else _optimize(n) for n in nodes]
-    live = [p for n, p in zip(nodes, plans) if n._value is None]
-    if len(live) >= 2:
-        _prefetch_batch_scans(live, ex)
-        _fuse_chain_groups(live, ex)
-    out = []
-    for n, p in zip(nodes, plans):
-        if n._value is None:
-            n._value = ex.run(p)
-        out.append(n._value)
+    with _span("planner.eval_batch", n=len(nodes)):
+        ex = _Executor()
+        plans = [n if n._value is not None else _optimize(n) for n in nodes]
+        live = [p for n, p in zip(nodes, plans) if n._value is None]
+        if len(live) >= 2:
+            _prefetch_batch_scans(live, ex)
+            _fuse_chain_groups(live, ex)
+        out = []
+        for n, p in zip(nodes, plans):
+            if n._value is None:
+                n._value = ex.run(p)
+            out.append(n._value)
     return out
 
 

@@ -45,6 +45,8 @@ import numpy as np
 from ..core import keys as K
 from ..core.assoc import Assoc
 from ..core.expr import LazyAssoc, _is_all, _sel_key
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
+from ..obs.trace import span as _span
 from .edgestore import EdgeStore, MultiInstanceDB
 from .lsmstore import LSMMultiInstanceDB, LSMStore
 from .registry import make_backend
@@ -60,6 +62,32 @@ DEFAULT_SCAN_TTL = 60.0
 # Default writes/sec above which full-table ('any'-band) scan results are
 # not admitted to the cache — they are evicted by any write and churn.
 DEFAULT_FULL_SCAN_WPS_LIMIT = 50.0
+
+# Scan-cache metric families: one labeled child per live ScanCache (the
+# cache keeps the only strong ref; see repro.obs.metrics).  The cache's
+# public hits/misses/… attributes are properties over these children, so
+# /metrics and T.stats() report the same underlying counts.
+_M_CACHE_HITS = _REGISTRY.counter(
+    "repro_cache_hits_total", "ScanCache lookups served from memory",
+    labels=("cache",))
+_M_CACHE_MISSES = _REGISTRY.counter(
+    "repro_cache_misses_total", "ScanCache lookups that hit the tablets",
+    labels=("cache",))
+_M_CACHE_EVICTIONS = _REGISTRY.counter(
+    "repro_cache_evictions_total",
+    "ScanCache entries evicted (TTL, capacity, write invalidation)",
+    labels=("cache",))
+_M_CACHE_ADMISSION_SKIPS = _REGISTRY.counter(
+    "repro_cache_admission_skips_total",
+    "Full-table scan results refused admission under write load",
+    labels=("cache",))
+_M_CACHE_BATCH_HITS = _REGISTRY.counter(
+    "repro_cache_batch_hits_total",
+    "Batched-eval members served from the ScanCache", labels=("cache",))
+_M_CACHE_BATCH_MISSES = _REGISTRY.counter(
+    "repro_cache_batch_misses_total",
+    "Batched-eval members that joined a union tablet scan",
+    labels=("cache",))
 
 
 class AccidentalDenseError(RuntimeError):
@@ -159,7 +187,6 @@ class ScanCache:
         self.full_scan_wps_limit = full_scan_wps_limit
         self.wps_window = wps_window
         self._write_times: deque = deque(maxlen=1024)
-        self.admission_skips = 0
         # skey → (assoc, expiry, axis, atoms); insertion-ordered for
         # oldest-first eviction when full.
         self._entries: dict = {}
@@ -169,28 +196,58 @@ class ScanCache:
         # pre-write result (the write's note_write ran before the scan
         # finished, when the entry wasn't there to evict)
         self.version = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        # batch-path probes (a subset of hits/misses): how often a
-        # batched eval was served by / had to populate per-member
-        # entries — the ``eval_batch``↔cache interplay counters.
-        self.batch_hits = 0
-        self.batch_misses = 0
+        # counters live in the process registry (one labeled child per
+        # cache); hits/misses/… below read them back, so /metrics and
+        # stats() can never disagree.  batch_* are the batch-path probes
+        # (a subset of hits/misses): how often a batched eval was served
+        # by / had to populate per-member entries.
+        self.metrics_label = _obj_label("cache")
+        lab = dict(cache=self.metrics_label)
+        self._m_hits = _M_CACHE_HITS.labels(**lab)
+        self._m_misses = _M_CACHE_MISSES.labels(**lab)
+        self._m_evictions = _M_CACHE_EVICTIONS.labels(**lab)
+        self._m_admission_skips = _M_CACHE_ADMISSION_SKIPS.labels(**lab)
+        self._m_batch_hits = _M_CACHE_BATCH_HITS.labels(**lab)
+        self._m_batch_misses = _M_CACHE_BATCH_MISSES.labels(**lab)
+
+    # registry-backed counter reads (compat: pre-obs attribute shapes)
+    @property
+    def hits(self):
+        return self._m_hits.value
+
+    @property
+    def misses(self):
+        return self._m_misses.value
+
+    @property
+    def evictions(self):
+        return self._m_evictions.value
+
+    @property
+    def admission_skips(self):
+        return self._m_admission_skips.value
+
+    @property
+    def batch_hits(self):
+        return self._m_batch_hits.value
+
+    @property
+    def batch_misses(self):
+        return self._m_batch_misses.value
 
     def get(self, key) -> Optional[Assoc]:
         with self._lock:
             hit = self._entries.get(key)
             if hit is None:
-                self.misses += 1
+                self._m_misses.inc()
                 return None
             assoc, expiry, _, _ = hit
             if self.clock() > expiry:
                 del self._entries[key]
-                self.evictions += 1
-                self.misses += 1
+                self._m_evictions.inc()
+                self._m_misses.inc()
                 return None
-            self.hits += 1
+            self._m_hits.inc()
             return assoc
 
     def put(self, key, assoc: Assoc, axis: str, atoms: _Atoms,
@@ -208,11 +265,11 @@ class ScanCache:
                 return
             if axis == "any" and \
                     self._writes_per_s_locked() > self.full_scan_wps_limit:
-                self.admission_skips += 1
+                self._m_admission_skips.inc()
                 return
             while len(self._entries) >= self.maxsize:
                 self._entries.pop(next(iter(self._entries)))
-                self.evictions += 1
+                self._m_evictions.inc()
             self._entries[key] = (assoc, self.clock() + ttl, axis, atoms)
 
     def note_write(self, rows: np.ndarray, cols: np.ndarray) -> None:
@@ -231,7 +288,8 @@ class ScanCache:
                       if self._touches(axis, atoms, rows, cols)]
             for k in doomed:
                 del self._entries[k]
-            self.evictions += len(doomed)
+            if doomed:
+                self._m_evictions.inc(len(doomed))
 
     @staticmethod
     def _touches(axis: str, atoms: _Atoms, rows: np.ndarray,
@@ -554,7 +612,8 @@ class DBTable:
         are applied inline and need no wait at all."""
         pool = getattr(self.backend, "_writer_pool", None)
         if pool is not None:
-            pool.drain()
+            with _span("writer.drain"):
+                pool.drain()
 
     # -- serving-layer admission hook --------------------------------------
     @property
@@ -593,28 +652,32 @@ class DBTable:
 
     # -- scan execution (called by the LazyAssoc executor) -----------------
     def _scan(self, rsel, csel) -> Assoc:
-        self._read_barrier()            # async writes become visible here
-        ratoms = catoms = None
-        if not self._is_degree:
-            ratoms, catoms = _classify(rsel), _classify(csel)
-            if ratoms.kind == "all" and catoms.kind != "all":
-                # the degree guard fires before the cache so a guarded
-                # view refuses super-node bands even when they are hot
-                self._degree_guard(catoms)
-        cache = self._cache
-        if cache is None:
-            return self._scan_route(rsel, csel, ratoms, catoms)
-        key = (self.tables, _sel_key(rsel), _sel_key(csel))
-        hit = cache.get(key)
-        if hit is not None:
-            self.stats["cache_hit"] += 1
-            return hit
-        v0 = cache.version          # writes after this gate admission
-        out = self._scan_route(rsel, csel, ratoms, catoms)
-        self.stats["cache_miss"] += 1
-        axis, atoms = self._band(rsel, ratoms, catoms)
-        cache.put(key, out, axis, atoms, ttl=self.cache_ttl, if_version=v0)
-        return out
+        with _span("db.scan", table="+".join(self.tables)) as sp:
+            self._read_barrier()        # async writes become visible here
+            ratoms = catoms = None
+            if not self._is_degree:
+                ratoms, catoms = _classify(rsel), _classify(csel)
+                if ratoms.kind == "all" and catoms.kind != "all":
+                    # the degree guard fires before the cache so a guarded
+                    # view refuses super-node bands even when they are hot
+                    self._degree_guard(catoms)
+            cache = self._cache
+            if cache is None:
+                return self._scan_route(rsel, csel, ratoms, catoms)
+            key = (self.tables, _sel_key(rsel), _sel_key(csel))
+            hit = cache.get(key)
+            if hit is not None:
+                self.stats["cache_hit"] += 1
+                sp.tag(cache="hit")
+                return hit
+            sp.tag(cache="miss")
+            v0 = cache.version      # writes after this gate admission
+            out = self._scan_route(rsel, csel, ratoms, catoms)
+            self.stats["cache_miss"] += 1
+            axis, atoms = self._band(rsel, ratoms, catoms)
+            cache.put(key, out, axis, atoms, ttl=self.cache_ttl,
+                      if_version=v0)
+            return out
 
     def _scan_batch(self, sels) -> list:
         """Serve a batch of subscripts with one union tablet scan per
@@ -634,6 +697,11 @@ class DBTable:
         :meth:`_scan`, where any error surfaces on the member that
         caused it.
         """
+        with _span("db.scan_batch", table="+".join(self.tables),
+                   n=len(sels)):
+            return self._scan_batch_impl(sels)
+
+    def _scan_batch_impl(self, sels) -> list:
         self._read_barrier()        # one visibility barrier for the batch
         out: list = [None] * len(sels)
         cache = self._cache
@@ -667,10 +735,10 @@ class DBTable:
                         (self.tables, _sel_key(rsel), _sel_key(csel)))
                     if hit is not None:
                         self.stats["cache_hit"] += 1
-                        cache.batch_hits += 1
+                        cache._m_batch_hits.inc()
                         out[i] = hit
                         continue
-                    cache.batch_misses += 1
+                    cache._m_batch_misses.inc()
                 misses.append(m)
             if not misses:
                 continue

@@ -49,6 +49,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..core.assoc import Assoc
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
+from ..obs.trace import span as _span, traced_iter as _traced_iter
 from .edgestore import MultiInstanceDB, connections_query
 
 # -- WAL framing -------------------------------------------------------------
@@ -58,6 +60,22 @@ _KIND_TRIPLES = 0x01
 _KIND_DEGREE = 0x02
 _FRAME_HDR = struct.Struct("<BBI")
 _FRAME_CRC = struct.Struct("<I")
+
+# -- LSM metric families (one labeled child per live store) ------------------
+# The ROADMAP's compaction-hardening item needs these to quantify write
+# amplification and stall time; ``n_syncs`` keeps its attribute shape as
+# a property over the sync counter.
+_M_WAL_APPENDS = _REGISTRY.counter(
+    "repro_lsm_wal_appends_total", "WAL frames appended", labels=("store",))
+_M_SPILLS = _REGISTRY.counter(
+    "repro_lsm_spills_total", "Memtable spills to immutable runs",
+    labels=("store",))
+_M_COMPACTIONS = _REGISTRY.counter(
+    "repro_lsm_compactions_total", "Full-merge compactions",
+    labels=("store",))
+_M_SYNCS = _REGISTRY.counter(
+    "repro_lsm_syncs_total", "WAL fsyncs (durability barriers)",
+    labels=("store",))
 
 # -- SSTable layout ----------------------------------------------------------
 _SST_FORMAT = 1
@@ -261,7 +279,12 @@ class LSMStore:
         self._mem = _Memtable()
         self._runs: list[SSTable] = []
         self._wal_dirty = False
-        self.n_syncs = 0
+        self.metrics_label = _obj_label("lsm")
+        lab = dict(store=self.metrics_label)
+        self._m_wal_appends = _M_WAL_APPENDS.labels(**lab)
+        self._m_spills = _M_SPILLS.labels(**lab)
+        self._m_compactions = _M_COMPACTIONS.labels(**lab)
+        self._m_syncs = _M_SYNCS.labels(**lab)
         os.makedirs(path, exist_ok=True)
         for fn in sorted(f for f in os.listdir(path)
                          if f.startswith("run-") and f.endswith(".sst")):
@@ -309,6 +332,7 @@ class LSMStore:
                         + payload + _FRAME_CRC.pack(zlib.crc32(payload)))
         self._wal.flush()           # to the OS; fsync only at sync()
         self._wal_dirty = True
+        self._m_wal_appends.inc()
 
     def _wal_apply(self, kind: int, record, apply) -> None:
         """Append the frame, then apply it to the memtable; roll the WAL
@@ -344,7 +368,12 @@ class LSMStore:
                 return
             os.fsync(self._wal.fileno())
             self._wal_dirty = False
-            self.n_syncs += 1
+            self._m_syncs.inc()
+
+    @property
+    def n_syncs(self) -> int:
+        """WAL fsyncs performed (registry-backed compat shape)."""
+        return self._m_syncs.value
 
     def close(self) -> None:
         with self._lock:
@@ -391,19 +420,21 @@ class LSMStore:
         mem = self._mem
         if not mem.n_mutations and not mem.deg:
             return
-        path = os.path.join(self.path, f"run-{self._next_run:06d}.sst")
-        SSTable.write(path, mem.edge, mem.edge_t, dict(mem.deg),
-                      {"n_mutations": mem.n_mutations,
-                       "ingest_bytes": mem.ingest_bytes})
-        self._next_run += 1
-        self._runs.append(SSTable(path))
-        self._mem = _Memtable()
-        self._wal.close()
-        self._wal = open(self._wal_path, "wb")   # truncate: contents spilled
-        self._wal.flush()
-        os.fsync(self._wal.fileno())    # persist the truncation — or a
-        self._wal_dirty = False         # power loss could resurrect the
-                                        # old WAL on top of the new run
+        with _span("lsm.spill", store=self.name, rows=mem.n_mutations):
+            self._m_spills.inc()
+            path = os.path.join(self.path, f"run-{self._next_run:06d}.sst")
+            SSTable.write(path, mem.edge, mem.edge_t, dict(mem.deg),
+                          {"n_mutations": mem.n_mutations,
+                           "ingest_bytes": mem.ingest_bytes})
+            self._next_run += 1
+            self._runs.append(SSTable(path))
+            self._mem = _Memtable()
+            self._wal.close()
+            self._wal = open(self._wal_path, "wb")  # truncate: spilled
+            self._wal.flush()
+            os.fsync(self._wal.fileno())    # persist the truncation — or a
+            self._wal_dirty = False         # power loss could resurrect the
+                                            # old WAL on top of the new run
         if len(self._runs) > self.max_runs:
             self._compact_locked()
 
@@ -421,27 +452,29 @@ class LSMStore:
     def _compact_locked(self) -> None:
         if len(self._runs) <= 1:
             return
-        edge: dict[str, dict[str, str]] = {}
-        edge_t: dict[str, dict[str, str]] = {}
-        deg: defaultdict[str, float] = defaultdict(float)
-        n_mut = n_bytes = 0
-        for run in self._runs:              # oldest → newest: newer wins
-            for k, cells in run.scan_all("edge"):
-                edge.setdefault(k, {}).update(cells)
-            for k, cells in run.scan_all("edgeT"):
-                edge_t.setdefault(k, {}).update(cells)
-            for k, d in run.scan_all("deg"):
-                deg[k] += float(d)
-            n_mut += run.meta["n_mutations"]
-            n_bytes += run.meta["ingest_bytes"]
-        path = os.path.join(self.path, f"run-{self._next_run:06d}.sst")
-        SSTable.write(path, edge, edge_t, dict(deg),
-                      {"n_mutations": n_mut, "ingest_bytes": n_bytes})
-        self._next_run += 1
-        old = self._runs
-        self._runs = [SSTable(path)]
-        for run in old:
-            os.remove(run.path)
+        with _span("lsm.compact", store=self.name, runs=len(self._runs)):
+            self._m_compactions.inc()
+            edge: dict[str, dict[str, str]] = {}
+            edge_t: dict[str, dict[str, str]] = {}
+            deg: defaultdict[str, float] = defaultdict(float)
+            n_mut = n_bytes = 0
+            for run in self._runs:          # oldest → newest: newer wins
+                for k, cells in run.scan_all("edge"):
+                    edge.setdefault(k, {}).update(cells)
+                for k, cells in run.scan_all("edgeT"):
+                    edge_t.setdefault(k, {}).update(cells)
+                for k, d in run.scan_all("deg"):
+                    deg[k] += float(d)
+                n_mut += run.meta["n_mutations"]
+                n_bytes += run.meta["ingest_bytes"]
+            path = os.path.join(self.path, f"run-{self._next_run:06d}.sst")
+            SSTable.write(path, edge, edge_t, dict(deg),
+                          {"n_mutations": n_mut, "ingest_bytes": n_bytes})
+            self._next_run += 1
+            old = self._runs
+            self._runs = [SSTable(path)]
+            for run in old:
+                os.remove(run.path)
 
     # -- scans (EdgeStore protocol) ----------------------------------------
     def _section(self, transpose: bool) -> str:
@@ -461,7 +494,16 @@ class LSMStore:
         out.update(mem)
         return out
 
+    # scan generators are traced via traced_iter (one span per full
+    # consumption — a span can't stay open across generator yields);
+    # the *_raw variants are the real scans, also used for internal
+    # delegation so one logical scan never records twice.
     def scan_keys(self, keys: Sequence[str], transpose: bool = False):
+        return _traced_iter("lsm.scan_keys",
+                            self._scan_keys_raw(keys, transpose),
+                            store=self.name)
+
+    def _scan_keys_raw(self, keys: Sequence[str], transpose: bool = False):
         table = self._section(transpose)
         uniq = sorted(set(keys))
         with self._lock:    # snapshot, then read/yield outside the lock
@@ -483,6 +525,12 @@ class LSMStore:
         """Inclusive [start, stop] in key order (``stop=None`` =
         unbounded): k-way merge of the memtable and every run, newer
         tiers overwriting per cell."""
+        return _traced_iter("lsm.scan_key_range",
+                            self._scan_key_range_raw(start, stop, transpose),
+                            store=self.name)
+
+    def _scan_key_range_raw(self, start: str, stop: Optional[str],
+                            transpose: bool = False):
         import heapq
         table = self._section(transpose)
         with self._lock:
@@ -513,6 +561,11 @@ class LSMStore:
             yield cur_key, cur_cells
 
     def scan_prefix(self, prefix: str, transpose: bool = False):
+        return _traced_iter("lsm.scan_prefix",
+                            self._scan_prefix_raw(prefix, transpose),
+                            store=self.name)
+
+    def _scan_prefix_raw(self, prefix: str, transpose: bool = False):
         table = self._section(transpose)
         with self._lock:
             bloom_skip = not any(r.may_contain_prefix(table, prefix)
@@ -524,13 +577,15 @@ class LSMStore:
         if bloom_skip:
             yield from items
             return
-        yield from self.scan_key_range(prefix, prefix + "￿",
-                                       transpose=transpose)
+        yield from self._scan_key_range_raw(prefix, prefix + "￿",
+                                            transpose=transpose)
 
     def scan_everything(self, transpose: bool = False):
         # stop=None, not a '￿' sentinel — astral-plane keys sort
         # above any BMP bound and must still appear in full scans
-        yield from self.scan_key_range("", None, transpose=transpose)
+        return _traced_iter("lsm.scan_everything",
+                            self._scan_key_range_raw("", None, transpose),
+                            store=self.name)
 
     def keys_with_prefix(self, prefix: str,
                          transpose: bool = True) -> list[str]:
@@ -548,6 +603,10 @@ class LSMStore:
         return total
 
     def degree_items(self, prefix: str = ""):
+        return _traced_iter("lsm.degree_items",
+                            self._degree_items_raw(prefix), store=self.name)
+
+    def _degree_items_raw(self, prefix: str = ""):
         acc: defaultdict[str, float] = defaultdict(float)
         with self._lock:
             for k, d in self._mem.deg.items():

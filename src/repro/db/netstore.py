@@ -73,6 +73,8 @@ from typing import Iterable, Optional, Sequence
 import numpy as np
 
 from ..core.assoc import Assoc
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
+from ..obs.trace import span as _span, traced_iter as _traced_iter
 from .edgestore import EdgeStore, MultiInstanceDB, connections_query
 
 _MAGIC = 0xD5
@@ -80,6 +82,20 @@ _HDR = struct.Struct("<BI")
 _MAX_FRAME = 1 << 30            # 1 GiB sanity bound on a length prefix
 
 DEFAULT_CHUNK_ITEMS = 512       # records per streamed scan frame
+
+# Client-side RPC metric families.  Children are labeled with both the
+# shard address and a per-client id, so two clients dialing the same
+# shard (e.g. across rebinds in one process) never merge counts — the
+# ``n_rpcs`` compat property must read back only its own.  Replaces the
+# unsynchronized ``self.n_rpcs += 1`` that concurrent reader threads
+# used to race on.
+_M_RPCS = _REGISTRY.counter(
+    "repro_rpc_total", "Completed shard RPCs (client side)",
+    labels=("shard", "client"))
+_M_RPC_BYTES = _REGISTRY.counter(
+    "repro_rpc_bytes_total",
+    "Framed RPC bytes on the wire (client side), by direction",
+    labels=("shard", "client", "dir"))
 
 
 class ShardError(RuntimeError):
@@ -90,9 +106,12 @@ class ShardError(RuntimeError):
 # Framing.
 # ---------------------------------------------------------------------------
 
-def _send_frame(sock: socket.socket, obj) -> None:
+def _send_frame(sock: socket.socket, obj) -> int:
+    """Send one frame; returns its size on the wire (header + payload)."""
     payload = json.dumps(obj).encode()
-    sock.sendall(_HDR.pack(_MAGIC, len(payload)) + payload)
+    buf = _HDR.pack(_MAGIC, len(payload)) + payload
+    sock.sendall(buf)
+    return len(buf)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
@@ -110,18 +129,24 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
     return b"".join(chunks)
 
 
-def _recv_frame(sock: socket.socket):
-    """Decoded payload, or None on clean EOF between frames."""
+def _recv_frame_sized(sock: socket.socket):
+    """(decoded payload, wire bytes), or (None, 0) on clean EOF between
+    frames — the sized variant the client's byte counters use."""
     hdr = _recv_exact(sock, _HDR.size)
     if hdr is None:
-        return None
+        return None, 0
     magic, n = _HDR.unpack(hdr)
     if magic != _MAGIC or n > _MAX_FRAME:
         raise ConnectionError(f"bad frame header (magic={magic:#x}, len={n})")
     payload = _recv_exact(sock, n)
     if payload is None:
         raise ConnectionError("connection closed mid-frame")
-    return json.loads(payload.decode())
+    return json.loads(payload.decode()), _HDR.size + n
+
+
+def _recv_frame(sock: socket.socket):
+    """Decoded payload, or None on clean EOF between frames."""
+    return _recv_frame_sized(sock)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -324,7 +349,22 @@ class ShardClient:
         # since the last barrier — every binding read flushes, and a
         # clean barrier must stay ~µs (pure client-side check)
         self._dirty = False
-        self.n_rpcs = 0
+        # RPC counters live in the process registry (atomic — reader
+        # threads scan concurrently); n_rpcs below reads them back
+        self.metrics_label = _obj_label("client")
+        self._m_rpcs = _M_RPCS.labels(shard=address,
+                                      client=self.metrics_label)
+        self._m_tx = _M_RPC_BYTES.labels(shard=address,
+                                         client=self.metrics_label,
+                                         dir="tx")
+        self._m_rx = _M_RPC_BYTES.labels(shard=address,
+                                         client=self.metrics_label,
+                                         dir="rx")
+
+    @property
+    def n_rpcs(self) -> int:
+        """Completed RPCs (unary replies + finished scan streams)."""
+        return self._m_rpcs.value
 
     # -- connection pool ---------------------------------------------------
     def _dial(self) -> socket.socket:
@@ -363,41 +403,52 @@ class ShardClient:
 
     # -- RPC core ----------------------------------------------------------
     def _rpc(self, op: str, **kw):
-        s = self._acquire()
-        try:
-            _send_frame(s, [op, kw])
-            reply = _recv_frame(s)
-        except (ConnectionError, OSError) as e:
-            self._discard(s)
-            raise ConnectionError(
-                f"shard {self.name} at {self.address} failed during "
-                f"{op}: {e}") from e
-        if reply is None:
-            self._discard(s)
-            raise ConnectionError(
-                f"shard {self.name} at {self.address} closed the "
-                f"connection during {op}")
-        self._release(s)
-        self.n_rpcs += 1
-        status, *rest = reply
-        if status == "err":
-            raise ShardError(f"{self.name}: {rest[0]}: {rest[1]}")
-        return rest[0]
+        with _span(f"rpc.{op}", shard=self.address):
+            s = self._acquire()
+            try:
+                self._m_tx.inc(_send_frame(s, [op, kw]))
+                reply, nbytes = _recv_frame_sized(s)
+            except (ConnectionError, OSError) as e:
+                self._discard(s)
+                raise ConnectionError(
+                    f"shard {self.name} at {self.address} failed during "
+                    f"{op}: {e}") from e
+            if reply is None:
+                self._discard(s)
+                raise ConnectionError(
+                    f"shard {self.name} at {self.address} closed the "
+                    f"connection during {op}")
+            self._release(s)
+            self._m_rx.inc(nbytes)
+            self._m_rpcs.inc()
+            status, *rest = reply
+            if status == "err":
+                raise ShardError(f"{self.name}: {rest[0]}: {rest[1]}")
+            return rest[0]
 
     def _stream(self, op: str, **kw):
+        """One traced span covers the stream's whole consumption (first
+        ``next`` to exhaustion or abandonment) — spans can't be held
+        open across generator suspensions, so :func:`traced_iter`
+        records against the consumer's context instead."""
+        return _traced_iter(f"rpc.{op}", self._stream_raw(op, **kw),
+                            shard=self.address)
+
+    def _stream_raw(self, op: str, **kw):
         s = self._acquire()
         try:
             try:
-                _send_frame(s, [op, kw])
+                self._m_tx.inc(_send_frame(s, [op, kw]))
                 while True:
-                    reply = _recv_frame(s)
+                    reply, nbytes = _recv_frame_sized(s)
                     if reply is None:
                         raise ConnectionError(
                             f"shard {self.name} at {self.address} closed "
                             f"the connection during {op}")
+                    self._m_rx.inc(nbytes)
                     status, payload = reply[0], reply[1:]
                     if status == "end":
-                        self.n_rpcs += 1
+                        self._m_rpcs.inc()
                         self._release(s)
                         return
                     if status == "err":

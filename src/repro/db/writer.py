@@ -56,12 +56,42 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import weakref
 import zlib
 from typing import Optional
 
 import numpy as np
 
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
+from ..obs.trace import span as _span
+
 _STOP = object()
+
+# Writer-pool metric families: one labeled child per live pool (the pool
+# keeps the only strong ref).  n_written / n_retried / tap_errors are
+# properties over these children — one count, read by both stats() and
+# /metrics.  The gauges read live pool state at scrape via weakref.
+_M_WRITTEN = _REGISTRY.counter(
+    "repro_writer_written_total", "Triples applied by writer threads",
+    labels=("pool",))
+_M_RETRIED = _REGISTRY.counter(
+    "repro_writer_retried_total",
+    "Blocks that succeeded only after at least one retry",
+    labels=("pool",))
+_M_WRITE_ERRORS = _REGISTRY.counter(
+    "repro_writer_errors_total",
+    "Blocks that exhausted their retries (writes lost)", labels=("pool",))
+_M_TAP_ERRORS = _REGISTRY.counter(
+    "repro_writer_tap_errors_total",
+    "Ingest-tap callbacks that raised (counted, never propagated)",
+    labels=("pool",))
+_M_PENDING = _REGISTRY.gauge(
+    "repro_writer_pending",
+    "Rows buffered plus blocks enqueued but not yet applied",
+    labels=("pool",))
+_M_QUEUE_DEPTH = _REGISTRY.gauge(
+    "repro_writer_queue_depth", "Blocks sitting in writer queues",
+    labels=("pool",))
 
 
 def _stable_key_hash(k: str) -> int:
@@ -85,8 +115,6 @@ class _InstanceWriter:
         self.q: "queue.Queue" = queue.Queue(maxsize=maxsize)
         self.buf: list = []          # tier-1 buffer, guarded by pool lock
         self.buf_rows = 0
-        self.n_written = 0
-        self.n_retried = 0
         # spill-sequence barrier state: blocks are queued as
         # (seq, block); applied_seq advances (under cond) once a block's
         # mutation has landed — error or not, so barriers never hang.
@@ -152,9 +180,9 @@ class _InstanceWriter:
                 fault = self.pool.fault_injector
                 if fault is not None:
                     fault.maybe_kill(f"writer/{self.store.name}")
-                self.n_written += self.store.put_triples(r, c, v)
+                self.pool._m_written.inc(self.store.put_triples(r, c, v))
                 if attempt:
-                    self.n_retried += 1
+                    self.pool._m_retried.inc()
                 self.pool._notify_taps(r, c, v)
                 return
             except BaseException as e:  # noqa: BLE001 — propagate at barrier
@@ -210,7 +238,19 @@ class WriterPool:
         # drains* (streaming rollups ride this — no extra table scan).
         # Registration is copy-on-write so _notify_taps never locks.
         self._taps: tuple = ()
-        self.tap_errors = 0
+        self.metrics_label = _obj_label("pool")
+        lab = dict(pool=self.metrics_label)
+        self._m_written = _M_WRITTEN.labels(**lab)
+        self._m_retried = _M_RETRIED.labels(**lab)
+        self._m_write_errors = _M_WRITE_ERRORS.labels(**lab)
+        self._m_tap_errors = _M_TAP_ERRORS.labels(**lab)
+        self._m_pending = _M_PENDING.labels(**lab)
+        self._m_queue_depth = _M_QUEUE_DEPTH.labels(**lab)
+        # live-read gauges: weakref-closing so the gauge (held weakly by
+        # its family anyway) never resurrects or pins a closed pool
+        ref = weakref.ref(self)
+        self._m_pending.set_function(lambda: ref().pending)
+        self._m_queue_depth.set_function(lambda: ref().queue_depth)
         self._writers = [_InstanceWriter(s, maxsize, self) for s in stores]
 
     # -- ingest taps --------------------------------------------------------
@@ -232,11 +272,11 @@ class WriterPool:
             try:
                 fn(r, c, v)
             except BaseException:   # noqa: BLE001 — observer, not writer
-                with self._err_lock:
-                    self.tap_errors += 1
+                self._m_tap_errors.inc()
 
     # -- error plumbing ----------------------------------------------------
     def _record_error(self, e: BaseException) -> None:
+        self._m_write_errors.inc()
         with self._err_lock:
             self._errors.append(e)
 
@@ -332,7 +372,8 @@ class WriterPool:
     def _sync_backend(self) -> None:
         sync = getattr(self.backend, "sync", None)
         if sync is not None:
-            sync()
+            with _span("backend.sync"):
+                sync()
 
     def close(self) -> None:
         """Flush, stop the writer threads, and re-raise pending errors."""
@@ -358,25 +399,45 @@ class WriterPool:
     # -- introspection -----------------------------------------------------
     @property
     def pending(self) -> int:
-        """Rows buffered plus blocks enqueued but not yet applied."""
-        return (sum(w.buf_rows for w in self._writers)
-                + sum(w.q.unfinished_tasks for w in self._writers))
+        """Rows buffered plus blocks enqueued but not yet applied.  Read
+        under the pool lock: ``buf_rows`` moves to ``unfinished_tasks``
+        at spill time while that lock is held, so a locked read can't
+        see a row in both tiers (or neither) mid-spill."""
+        with self._lock:
+            return (sum(w.buf_rows for w in self._writers)
+                    + sum(w.q.unfinished_tasks for w in self._writers))
 
     @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return sum(w.q.qsize() for w in self._writers)
+
+    # registry-backed counter reads (compat: pre-obs attribute shapes)
+    @property
     def n_written(self) -> int:
-        return sum(w.n_written for w in self._writers)
+        return self._m_written.value
 
     @property
     def n_retried(self) -> int:
         """Blocks that succeeded only after at least one retry."""
-        return sum(w.n_retried for w in self._writers)
+        return self._m_retried.value
+
+    @property
+    def tap_errors(self) -> int:
+        return self._m_tap_errors.value
 
     def stats(self) -> dict:
-        """Counter snapshot (merged into ``DBTable.stats()``)."""
+        """Counter snapshot (merged into ``DBTable.stats()``).  The
+        queue-state pair is taken in one locked pass so ``pending`` /
+        ``queue_depth`` can't tear against a concurrent spill."""
         with self._err_lock:
             n_err = len(self._errors)
-        return {"pending": self.pending,
-                "queue_depth": sum(w.q.qsize() for w in self._writers),
+        with self._lock:
+            pending = (sum(w.buf_rows for w in self._writers)
+                       + sum(w.q.unfinished_tasks for w in self._writers))
+            depth = sum(w.q.qsize() for w in self._writers)
+        return {"pending": pending,
+                "queue_depth": depth,
                 "n_written": self.n_written,
                 "n_retried": self.n_retried,
                 "n_errors": n_err,

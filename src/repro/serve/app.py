@@ -32,19 +32,37 @@ Run standalone::
 from __future__ import annotations
 
 import json
+import random
 import threading
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib.parse import parse_qs, urlsplit
 
 from ..db.binding import AccidentalDenseError, DBTable
 from ..db.writer import AsyncWriterError
+from ..obs.metrics import REGISTRY
+from ..obs.trace import Tracer
 from .auth import AuthError, TokenAuth
 from .coalesce import QueryCoalescer
 from .jobs import JobQueue, QueueFull, UnknownJob
 from .ratelimit import RateLimited, RateLimiter
 from .routes import HTTPError, Request, match
 from .stream import AlertPublisher, StatsPublisher
+
+_PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+# HTTP metric families, labeled by registered route *pattern* (bounded
+# cardinality — "/v1/jobs/{id}", never the raw path) and status.  The
+# gateway pins each child it uses in _http_children (families hold
+# children weakly).
+_M_HTTP = REGISTRY.counter(
+    "repro_http_requests_total", "Gateway requests by route and status",
+    labels=("route", "status"))
+_M_HTTP_SECONDS = REGISTRY.histogram(
+    "repro_http_request_seconds",
+    "Gateway request wall time by route (SSE: setup only)",
+    labels=("route",))
 
 
 class Gateway:
@@ -56,7 +74,9 @@ class Gateway:
                  job_result_ttl: float = 600.0,
                  stats_interval: float = 1.0,
                  coalesce_window: float = 0.003,
-                 stream_analytics=None):
+                 stream_analytics=None,
+                 trace_sample: float = 0.0,
+                 slow_threshold_s: float = 0.25):
         # the serving view always runs the densification guard: an
         # interactive endpoint must 413, never OOM the gateway
         if degree_limit is not None:
@@ -64,6 +84,14 @@ class Gateway:
         self.table = table
         self.auth = auth
         self.limiter = RateLimiter()
+        # request tracing: ?trace=1 / X-Trace-Id always trace; otherwise
+        # trace_sample (probability, default 0.0) decides — the untraced
+        # hot path costs one ContextVar read per instrumented site.  The
+        # tracer doubles as the slow-query log (/v1/debug/slow).
+        self.trace_sample = float(trace_sample)
+        self.tracer = Tracer(slow_threshold_s=slow_threshold_s)
+        self._http_children: dict = {}      # (route, status) pins
+        self._http_lock = threading.Lock()
         self.jobs = JobQueue(n_workers=n_job_workers,
                              max_queued=max_queued_jobs,
                              result_ttl=job_result_ttl)
@@ -148,14 +176,78 @@ class Gateway:
             self._thread = None
 
     # -- dispatch (called from request threads) ----------------------------
-    def handle(self, req: Request, authorization: Optional[str]):
-        """(status, payload_dict, headers) — or (200, iterator, headers)
-        for SSE routes.  All error mapping happens here."""
+    def handle(self, req: Request, authorization: Optional[str],
+               headers=None):
+        """(status, payload, resp_headers) — payload is a dict, an SSE
+        iterator, or a str (plain-text endpoints like /metrics).  Wraps
+        :meth:`_handle` with the observability shell: per-request trace
+        root (opt-in), HTTP counters/latency by route pattern, and the
+        untraced slow-query note.  ``headers`` is the incoming header
+        mapping (for ``X-Trace-Id``)."""
+        if req.method == "GET" and req.path == "/metrics":
+            # the scrape endpoint: unauthenticated, unmetered, untraced —
+            # a Prometheus target can't carry tenant tokens
+            return 200, REGISTRY.render(), {
+                "Content-Type": _PROM_CONTENT_TYPE}
+        incoming = headers.get("X-Trace-Id") if headers is not None else None
+        traced = (req.params.get("trace") == "1" or bool(incoming)
+                  or (self.trace_sample > 0.0
+                      and random.random() < self.trace_sample))
+        wall0 = time.time()
+        t0 = time.perf_counter()
+        status = 500
+        root = None
+        try:
+            if traced:
+                root = self.tracer.start(f"{req.method} {req.path}",
+                                         trace_id=incoming,
+                                         method=req.method, path=req.path)
+                with root:
+                    status, out, hdrs = self._handle(req, authorization)
+                hdrs = dict(hdrs)
+                hdrs["X-Trace-Id"] = root.trace_id
+                return status, out, hdrs
+            status, out, hdrs = self._handle(req, authorization)
+            return status, out, hdrs
+        except Exception as e:
+            status = getattr(e, "status", 500)
+            if root is not None:
+                # best-effort: the error response still names its trace
+                eh = getattr(e, "headers", None)
+                if isinstance(eh, dict):
+                    eh.setdefault("X-Trace-Id", root.trace_id)
+            raise
+        finally:
+            dur = time.perf_counter() - t0
+            pattern = getattr(req, "route_pattern", req.path)
+            self._observe_http(pattern, status, dur)
+            if not traced:
+                # sampling must never hide a slow query entirely
+                self.tracer.note_slow(f"{req.method} {req.path}", wall0,
+                                      dur, route=pattern, status=status)
+
+    def _observe_http(self, pattern: str, status: int, dur: float) -> None:
+        key = (pattern, str(status))
+        with self._http_lock:
+            pair = self._http_children.get(key)
+            if pair is None:
+                pair = (_M_HTTP.labels(route=pattern, status=str(status)),
+                        _M_HTTP_SECONDS.labels(route=pattern))
+                self._http_children[key] = pair
+        counter, hist = pair
+        counter.inc()
+        hist.observe(dur)
+
+    def _handle(self, req: Request, authorization: Optional[str]):
+        """The pre-obs dispatch: route match → auth → rate limit →
+        handler, with all error mapping."""
         if req.method == "GET" and req.path == "/healthz":
+            req.route_pattern = "/healthz"
             return 200, {"ok": True}, {}
         rt, args = match(req.method, req.path)
         if rt is None:
             raise HTTPError(404, f"no route for {req.method} {req.path}")
+        req.route_pattern = rt.pattern      # bounded metric label
         req.tenant = self.auth.authenticate(authorization)
         try:
             self.limiter.acquire(req.tenant, rt.cost)
@@ -210,6 +302,19 @@ class _GatewayHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _send_text(self, status: int, text: str,
+                   headers: Optional[dict] = None) -> None:
+        data = text.encode("utf-8")
+        headers = dict(headers or {})
+        ctype = headers.pop("Content-Type", "text/plain; charset=utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(data)))
+        for k, v in headers.items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(data)
+
     def _send_sse(self, frames) -> None:
         self.send_response(200)
         self.send_header("Content-Type", "text/event-stream")
@@ -229,9 +334,13 @@ class _GatewayHandler(BaseHTTPRequestHandler):
         try:
             req = self._request()
             status, out, headers = self.gateway.handle(
-                req, self.headers.get("Authorization"))
+                req, self.headers.get("Authorization"),
+                headers=self.headers)
             if hasattr(out, "__next__"):        # SSE iterator
                 self._send_sse(out)
+                return
+            if isinstance(out, str):            # plain text (/metrics)
+                self._send_text(status, out, headers)
                 return
             self._send_json(status, out, headers)
         except (HTTPError, AuthError, RateLimited) as e:
@@ -298,6 +407,12 @@ def main(argv=None) -> None:
     p.add_argument("--coalesce-window", type=float, default=0.003,
                    help="seconds concurrent hot-path queries wait to "
                         "batch into one eval (0 disables)")
+    p.add_argument("--trace-sample", type=float, default=0.0,
+                   help="probability of tracing a request that didn't "
+                        "ask (?trace=1 and X-Trace-Id always trace)")
+    p.add_argument("--slow-threshold", type=float, default=0.25,
+                   help="seconds above which a request enters the "
+                        "slow-query log (/v1/debug/slow)")
     p.add_argument("--demo-rows", type=int, default=0,
                    help="ingest ~this many synthetic traffic edges at "
                         "boot (demo/smoke)")
@@ -325,7 +440,9 @@ def main(argv=None) -> None:
                  n_job_workers=args.job_workers,
                  stats_interval=args.stats_interval,
                  coalesce_window=args.coalesce_window,
-                 stream_analytics=sa)
+                 stream_analytics=sa,
+                 trace_sample=args.trace_sample,
+                 slow_threshold_s=args.slow_threshold)
     addr = gw.start(host=args.host, port=args.port)
     print(f"LISTENING {addr}", flush=True)
 

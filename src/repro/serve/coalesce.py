@@ -23,6 +23,19 @@ from __future__ import annotations
 import threading
 import time
 
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
+
+_M_BATCHES = _REGISTRY.counter(
+    "repro_coalesce_batches_total", "Multi-member batch evals",
+    labels=("coalescer",))
+_M_COALESCED = _REGISTRY.counter(
+    "repro_coalesce_coalesced_total", "Requests served by a batched eval",
+    labels=("coalescer",))
+_M_SOLO = _REGISTRY.counter(
+    "repro_coalesce_solo_total",
+    "Single-member windows (plus every request while disabled)",
+    labels=("coalescer",))
+
 
 class _Pending:
     __slots__ = ("expr", "result", "error", "done")
@@ -50,18 +63,32 @@ class QueryCoalescer:
         self._sleep = sleep
         self._lock = threading.Lock()
         self._pending: list = []
-        self.n_batches = 0
-        self.n_coalesced = 0
-        self.n_solo = 0
+        self.metrics_label = _obj_label("coalescer")
+        lab = dict(coalescer=self.metrics_label)
+        self._m_batches = _M_BATCHES.labels(**lab)
+        self._m_coalesced = _M_COALESCED.labels(**lab)
+        self._m_solo = _M_SOLO.labels(**lab)
         self.max_batch = 0
+
+    # registry-backed counter reads (compat: pre-obs attribute shapes)
+    @property
+    def n_batches(self) -> int:
+        return self._m_batches.value
+
+    @property
+    def n_coalesced(self) -> int:
+        return self._m_coalesced.value
+
+    @property
+    def n_solo(self) -> int:
+        return self._m_solo.value
 
     def eval(self, expr):
         """Evaluate a deferred expression, batched with any concurrent
         callers inside one window.  Blocks until this request's result
         (or error) is ready."""
         if self.window <= 0:
-            with self._lock:
-                self.n_solo += 1
+            self._m_solo.inc()
             return expr.eval()
         p = _Pending(expr)
         with self._lock:
@@ -79,12 +106,12 @@ class QueryCoalescer:
 
     def _run(self, batch: list) -> None:
         from ..core.expr import eval_batch
+        if len(batch) >= 2:
+            self._m_batches.inc()
+            self._m_coalesced.inc(len(batch))
+        else:
+            self._m_solo.inc()
         with self._lock:
-            if len(batch) >= 2:
-                self.n_batches += 1
-                self.n_coalesced += len(batch)
-            else:
-                self.n_solo += 1
             self.max_batch = max(self.max_batch, len(batch))
         try:
             results = eval_batch([p.expr for p in batch])

@@ -26,9 +26,27 @@ import queue
 import secrets
 import threading
 import time
+import weakref
 from typing import Callable, Dict, Optional
 
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
 from .auth import Tenant
+
+_M_SUBMITTED = _REGISTRY.counter(
+    "repro_jobs_submitted_total", "Jobs accepted into the queue",
+    labels=("jobs",))
+_M_COMPLETED = _REGISTRY.counter(
+    "repro_jobs_completed_total", "Jobs finished successfully",
+    labels=("jobs",))
+_M_FAILED = _REGISTRY.counter(
+    "repro_jobs_failed_total", "Jobs that raised or were shut down",
+    labels=("jobs",))
+_M_JOB_COALESCED = _REGISTRY.counter(
+    "repro_jobs_coalesced_total",
+    "Submissions that rode a queued primary via batch_key",
+    labels=("jobs",))
+_M_JOB_DEPTH = _REGISTRY.gauge(
+    "repro_jobs_queue_depth", "Queued + running jobs", labels=("jobs",))
 
 
 class QueueFull(Exception):
@@ -80,8 +98,16 @@ class JobQueue:
         self._q: "queue.Queue" = queue.Queue()
         self._jobs: Dict[str, Job] = {}
         self._coalesce: Dict[str, Job] = {}     # batch_key → queued primary
-        self.n_coalesced = 0
         self._lock = threading.Lock()
+        self.metrics_label = _obj_label("jobs")
+        lab = dict(jobs=self.metrics_label)
+        self._m_submitted = _M_SUBMITTED.labels(**lab)
+        self._m_completed = _M_COMPLETED.labels(**lab)
+        self._m_failed = _M_FAILED.labels(**lab)
+        self._m_coalesced = _M_JOB_COALESCED.labels(**lab)
+        self._m_depth = _M_JOB_DEPTH.labels(**lab)
+        ref = weakref.ref(self)
+        self._m_depth.set_function(lambda: ref().live_jobs)
         self._closed = threading.Event()
         self._workers = [
             threading.Thread(target=self._work, name=f"gateway-job/{i}",
@@ -89,6 +115,17 @@ class JobQueue:
             for i in range(max(n_workers, 1))]
         for w in self._workers:
             w.start()
+
+    @property
+    def n_coalesced(self) -> int:
+        """Registry-backed compat shape for the pre-obs attribute."""
+        return self._m_coalesced.value
+
+    @property
+    def live_jobs(self) -> int:
+        with self._lock:
+            return sum(1 for j in self._jobs.values()
+                       if j.status in ("queued", "running"))
 
     # -- submission / polling ----------------------------------------------
     def submit(self, kind: str, fn: Callable[[], dict],
@@ -121,10 +158,12 @@ class JobQueue:
                 primary = self._coalesce.get(batch_key)
                 if primary is not None and primary.status == "queued":
                     primary.followers.append(job)
-                    self.n_coalesced += 1
+                    self._m_coalesced.inc()
+                    self._m_submitted.inc()
                     return job          # rides the primary's execution
                 job.batch_key = batch_key
                 self._coalesce[batch_key] = job
+        self._m_submitted.inc()
         self._q.put((job, fn))
         return job
 
@@ -162,6 +201,7 @@ class JobQueue:
                     j.status = "failed"
                     j.error = "gateway shutting down"
                     j.finished_at = self.clock()
+                self._m_failed.inc(len(group))
                 continue
             for j in group:
                 j.status = "running"
@@ -171,10 +211,12 @@ class JobQueue:
                 for j in group:
                     j.result = result
                     j.status = "done"
+                self._m_completed.inc(len(group))
             except Exception as e:      # surfaced via the status poll
                 for j in group:
                     j.error = f"{type(e).__name__}: {e}"
                     j.status = "failed"
+                self._m_failed.inc(len(group))
             finally:
                 now = self.clock()
                 for j in group:

@@ -27,7 +27,15 @@ import threading
 import time
 from typing import Dict
 
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
 from .auth import Tenant
+
+_M_ALLOWED = _REGISTRY.counter(
+    "repro_ratelimit_allowed_total", "Requests admitted by token buckets",
+    labels=("limiter",))
+_M_REJECTED = _REGISTRY.counter(
+    "repro_ratelimit_rejected_total",
+    "Requests rejected over budget (HTTP 429)", labels=("limiter",))
 
 
 class RateLimited(Exception):
@@ -80,8 +88,18 @@ class RateLimiter:
         self.clock = clock
         self._buckets: Dict[str, TokenBucket] = {}
         self._lock = threading.Lock()
-        self.n_allowed = 0
-        self.n_rejected = 0
+        self.metrics_label = _obj_label("limiter")
+        self._m_allowed = _M_ALLOWED.labels(limiter=self.metrics_label)
+        self._m_rejected = _M_REJECTED.labels(limiter=self.metrics_label)
+
+    # registry-backed counter reads (compat: pre-obs attribute shapes)
+    @property
+    def n_allowed(self) -> int:
+        return self._m_allowed.value
+
+    @property
+    def n_rejected(self) -> int:
+        return self._m_rejected.value
 
     def _bucket(self, tenant: Tenant) -> TokenBucket:
         b = self._buckets.get(tenant.name)
@@ -97,11 +115,11 @@ class RateLimiter:
     def acquire(self, tenant: Tenant, cost: float = 1.0) -> None:
         retry = self._bucket(tenant).try_acquire(cost)
         if retry > 0.0:
-            self.n_rejected += 1
+            self._m_rejected.inc()
             raise RateLimited(
                 f"tenant {tenant.name!r} over budget "
                 f"(rate={tenant.rate:g}/s, cost={cost:g})", retry)
-        self.n_allowed += 1
+        self._m_allowed.inc()
 
     def stats(self) -> dict:
         return {"n_allowed": self.n_allowed, "n_rejected": self.n_rejected,

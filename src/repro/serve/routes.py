@@ -52,6 +52,8 @@ class Route:
     handler: Callable
     cost: float = 1.0
     stream: bool = False            # SSE: handler returns an iterator
+    pattern: str = ""               # the route's registered pattern —
+                                    # the bounded-cardinality metric label
 
 
 # (method, pattern) → Route; "{id}"-style segments match any one segment
@@ -61,7 +63,8 @@ ROUTES: Dict[Tuple[str, str], Route] = {}
 def route(method: str, pattern: str, cost: float = 1.0,
           stream: bool = False):
     def deco(fn):
-        ROUTES[(method, pattern)] = Route(fn, cost=cost, stream=stream)
+        ROUTES[(method, pattern)] = Route(fn, cost=cost, stream=stream,
+                                          pattern=pattern)
         return fn
     return deco
 
@@ -372,9 +375,32 @@ def stats(gw, req: Request) -> dict:
             "jobs": gw.jobs.stats(),
             "coalesce": gw.coalescer.stats(),
             "kernel_launches": launch_counts(),
+            "trace": gw.tracer.stats(),
             "stream": gw.publisher.latest(),
             "streaming": to_jsonable(sa.stats()) if sa is not None
             else None}
+
+
+@route("GET", "/v1/trace/{id}", cost=0.1)
+def trace_tree(gw, req: Request, id: str) -> dict:
+    """The span tree one traced request left behind: request with
+    ``?trace=1`` (or an ``X-Trace-Id`` header), read the ``X-Trace-Id``
+    response header, fetch it here.  404 once the trace ages out of the
+    tracer's bounded ring."""
+    tree = gw.tracer.tree(id)
+    if tree is None:
+        raise HTTPError(404, f"unknown trace {id!r} (never sampled, or "
+                             f"evicted from the ring)")
+    return {"trace": id, "tree": tree}
+
+
+@route("GET", "/v1/debug/slow", cost=0.1)
+def slow_log(gw, req: Request) -> dict:
+    """The slow-query log: the N slowest requests over the tracer's
+    threshold, slowest first — traced entries carry their full span
+    tree, untraced ones are tree-less but still present."""
+    return {"threshold_s": gw.tracer.slow_threshold_s,
+            "slow": gw.tracer.slow()}
 
 
 @route("GET", "/v1/stream/stats", cost=1.0, stream=True)

@@ -37,6 +37,7 @@ accumulator combiner.
 from __future__ import annotations
 
 import threading
+import weakref
 from collections import Counter, OrderedDict
 from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
@@ -45,6 +46,14 @@ import numpy as np
 from ..analytics.powerlaw import fit_rank_size
 from ..analytics.serialize import JsonReportMixin
 from ..core.assoc import Assoc
+from ..obs.metrics import REGISTRY as _REGISTRY, obj_label as _obj_label
+
+_M_LATE = _REGISTRY.counter(
+    "repro_stream_late_total",
+    "Triples attributed to already-closed buckets", labels=("rollup",))
+_M_BACKLOG = _REGISTRY.gauge(
+    "repro_stream_backlog_blocks",
+    "Ingest-tap blocks parked awaiting a reader drain", labels=("rollup",))
 
 #: level name → bucket width in seconds (hierarchy must nest exactly:
 #: every width divides the next one up, or conservation is vacuous).
@@ -218,8 +227,19 @@ class TemporalRollup:
         self.n_ingested = 0          # triples seen
         self.n_attributed = 0        # triples placed in buckets (×1/level)
         self.n_unattributed = 0      # evicted pending: timestamp never seen
-        self.n_late = 0              # attributed after bucket close
         self.max_ts = -np.inf
+        self.metrics_label = _obj_label("rollup")
+        # attributed-after-bucket-close counter, registry-backed
+        self._m_late = _M_LATE.labels(rollup=self.metrics_label)
+        self._m_backlog = _M_BACKLOG.labels(rollup=self.metrics_label)
+        ref = weakref.ref(self)
+        self._m_backlog.set_function(lambda: len(ref()._backlog))
+
+    @property
+    def n_late(self) -> int:
+        """Triples attributed after their bucket closed (registry-backed
+        compat shape)."""
+        return self._m_late.value
 
     # ---------------------------------------------------------- ingest
 
@@ -374,7 +394,7 @@ class TemporalRollup:
                 if b is None:
                     b = buckets[bs] = _Bucket(bs)
                 if b.closed:
-                    self.n_late += n
+                    self._m_late.inc(n)
                 b.n_cells += n
                 b.n_packets += n_pk
                 b.deg_pending.append((c, idx))
